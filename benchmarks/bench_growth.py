@@ -1,0 +1,143 @@
+"""Paper-table benchmarks built on growth_lab.
+
+fig2  — BERT-Small→Base analogue: all five methods, savings at equal loss.
+fig3  — robustness to training recipe (RoBERTa analogue: 2× batch, 2.7× lr).
+fig6d — depth-only growth ablation (LiGO-depth vs stack vs interpolation).
+fig6w — width-only growth ablation (LiGO-width vs Net2Net).
+tab3  — number of LiGO gradient steps vs extra FLOPs and savings.
+tab1  — downstream transfer: finetune grown-vs-scratch models on a shifted
+        synthetic distribution; LiGO must match scratch transfer quality.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.growth_lab import (METHODS, PROXY_BIG, PROXY_SMALL, LabConfig,
+                                   pretrain_small, run_lab, run_method,
+                                   savings_table, step_flops, flops_per_token)
+
+
+def fig2(quick: bool = False, force: bool = False) -> Dict:
+    lab = LabConfig()
+    if quick:
+        lab = dataclasses.replace(lab, pretrain_steps=60, train_steps=80,
+                                  eval_every=20, ligo_steps=20)
+    return run_lab(lab, cache_tag="fig2" + ("_q" if quick else ""),
+                   force=force)
+
+
+def fig3_recipe_robustness(quick: bool = False, force: bool = False) -> Dict:
+    """RoBERTa-style recipe: larger batch + lr (paper: LiGO savings persist)."""
+    lab = LabConfig(batch=64, lr=8e-3, ligo_lr=8e-3)
+    if quick:
+        lab = dataclasses.replace(lab, pretrain_steps=60, train_steps=80,
+                                  eval_every=20, ligo_steps=20)
+    return run_lab(lab, methods=("scratch", "stackbert", "ligo"),
+                   cache_tag="fig3" + ("_q" if quick else ""), force=force)
+
+
+def fig6_depth(quick: bool = False, force: bool = False) -> Dict:
+    big = PROXY_SMALL.scaled(name="proxy-deep", n_layers=8)
+    lab = LabConfig(big=big)
+    if quick:
+        lab = dataclasses.replace(lab, pretrain_steps=60, train_steps=80,
+                                  eval_every=20, ligo_steps=20)
+    return run_lab(lab, methods=("scratch", "stackbert", "interpolation",
+                                 "ligo"),
+                   cache_tag="fig6d" + ("_q" if quick else ""), force=force)
+
+
+def fig6_width(quick: bool = False, force: bool = False) -> Dict:
+    big = PROXY_SMALL.scaled(name="proxy-wide", d_model=128, n_heads=8,
+                             d_head=16, d_ff=512)
+    lab = LabConfig(big=big)
+    if quick:
+        lab = dataclasses.replace(lab, pretrain_steps=60, train_steps=80,
+                                  eval_every=20, ligo_steps=20)
+    return run_lab(lab, methods=("scratch", "net2net", "ligo"),
+                   cache_tag="fig6w" + ("_q" if quick else ""), force=force)
+
+
+def tab3_ligo_steps(quick: bool = False, force: bool = False) -> Dict:
+    """#LiGO steps ∈ {10, 50, 100, 300}: savings should be flat (paper Tab 3)."""
+    import os
+    from benchmarks.growth_lab import ART
+    lab = LabConfig()
+    steps_grid = (10, 50, 100) if not quick else (5, 20)
+    if quick:
+        lab = dataclasses.replace(lab, pretrain_steps=60, train_steps=80,
+                                  eval_every=20)
+    path = os.path.join(ART, f"tab3_{lab.key()}_{steps_grid}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    small = pretrain_small(lab)
+    results = {"scratch": run_method("scratch", small, lab)}
+    results["scratch"].pop("final_params")
+    for k in steps_grid:
+        r = run_method("ligo", small, lab, ligo_steps=k)
+        r.pop("final_params")
+        results[f"ligo@{k}"] = r
+        print(f"[tab3] ligo@{k}: final={r['evals'][-1][1]:.4f}", flush=True)
+    table = savings_table(results, lab)
+    out = {"savings": table,
+           "extra_flops": {m: r["extra_flops"]
+                           for m, r in results.items()}}
+    os.makedirs(ART, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def tab1_downstream(quick: bool = False, force: bool = False) -> Dict:
+    """Transfer: pretrained-with-LiGO vs from-scratch, finetuned on a shifted
+    synthetic task (different markov seed). Paper Tab. 1: parity expected."""
+    import os
+    from benchmarks.growth_lab import ART, _batches
+    from repro.configs.base import TrainConfig
+    from repro.data import batch_for_step
+    from repro.models import loss_fn
+    from repro.optim import adamw_init
+    from repro.training import make_train_step
+
+    lab = LabConfig()
+    if quick:
+        lab = dataclasses.replace(lab, pretrain_steps=60, train_steps=80,
+                                  eval_every=40, ligo_steps=20)
+    path = os.path.join(ART, f"tab1_{lab.key()}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    small = pretrain_small(lab)
+    out = {}
+    ft_steps = 30 if quick else 150
+    for method in ("scratch", "ligo"):
+        r = run_method(method, small, lab)
+        big = r.pop("final_params")
+        # finetune on the shifted distribution (seed + 31337)
+        tcfg = TrainConfig(steps=ft_steps, warmup_steps=5, lr=1e-3)
+        opt = adamw_init(big)
+        step = jax.jit(make_train_step(lab.big, tcfg))
+        for i in range(ft_steps):
+            b = {k: jnp.asarray(v) for k, v in
+                 batch_for_step(lab.big, i, lab.batch, lab.seq,
+                                seed=31337).items()}
+            big, opt, _ = step(big, opt, b, jnp.asarray(i))
+        evals = []
+        for i in range(lab.eval_batches):
+            b = {k: jnp.asarray(v) for k, v in
+                 batch_for_step(lab.big, 20_000_000 + i, lab.batch, lab.seq,
+                                seed=31337 + 777).items()}
+            evals.append(float(loss_fn(big, lab.big, b)[0]))
+        out[method] = {"pretrain_final": r["evals"][-1][1],
+                       "transfer_loss": sum(evals) / len(evals)}
+        print(f"[tab1] {method}: transfer={out[method]['transfer_loss']:.4f}",
+              flush=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out

@@ -1,0 +1,79 @@
+"""Kernel microbenchmarks.
+
+On CPU the Pallas kernels run in interpret mode (Python-stepped — not a
+timing target), so wall-time rows benchmark the jnp reference paths under
+jit (the XLA baseline a TPU kernel must beat) and the kernels are re-validated
+for correctness. `derived` column = achieved GFLOP/s of the jit reference.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import (flash_attention, flash_attention_ref,
+                           ligo_blend_expand, ligo_blend_expand_ref)
+
+
+def _time(fn, *args, iters: int = 10) -> float:
+    fn(*args)  # warmup/compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # µs
+
+
+def bench() -> List[Tuple[str, float, str]]:
+    rows = []
+    rng = np.random.RandomState(0)
+
+    # --- ligo growth op: bert-small->base shapes (q/k/v leaf) ---
+    L2, L1, D2, D1 = 12, 6, 768, 512
+    w = jnp.asarray(rng.randn(L2, L1), jnp.float32)
+    B = jnp.asarray(rng.randn(D2, D1) * 0.1, jnp.float32)
+    W = jnp.asarray(rng.randn(L1, D1, D1) * 0.1, jnp.float32)
+    ref = jax.jit(ligo_blend_expand_ref)
+    us = _time(ref, w, B, W)
+    flops = 2 * (L2 * L1 * D1 * D1 + L2 * D2 * D1 * D1)
+    rows.append(("ligo_blend_expand_ref[bert_s2b]", us,
+                 f"{flops / us / 1e3:.1f}GFLOP/s"))
+    got = ligo_blend_expand(w, B, W)
+    err = float(jnp.max(jnp.abs(got - ref(w, B, W))))
+    rows.append(("ligo_blend_expand_pallas[interpret]", float("nan"),
+                 f"max_err={err:.1e}"))
+
+    # --- flash attention: 2k context ---
+    Bb, H, T, dh = 1, 8, 2048, 64
+    q = jnp.asarray(rng.randn(Bb, H, T, dh), jnp.float32)
+    k = jnp.asarray(rng.randn(Bb, H, T, dh), jnp.float32)
+    v = jnp.asarray(rng.randn(Bb, H, T, dh), jnp.float32)
+    refa = jax.jit(lambda a, b, c: flash_attention_ref(a, b, c, causal=True))
+    us = _time(refa, q, k, v, iters=3)
+    aflops = 4 * Bb * H * T * T * dh
+    rows.append(("flash_attention_ref[2k]", us,
+                 f"{aflops / us / 1e3:.1f}GFLOP/s"))
+    qs, ks, vs = q[:, :2, :256], k[:, :2, :256], v[:, :2, :256]
+    err = float(jnp.max(jnp.abs(
+        flash_attention(qs, ks, vs, causal=True)
+        - flash_attention_ref(qs, ks, vs, causal=True))))
+    rows.append(("flash_attention_pallas[interpret]", float("nan"),
+                 f"max_err={err:.1e}"))
+
+    # --- full apply_ligo on the real BERT pair ---
+    from repro.configs.paper_models import BERT_SMALL, BERT_BASE
+    from repro.core import apply_ligo, init_ligo_params
+    from repro.models import init_params
+    c1 = BERT_SMALL.scaled(dtype="float32")
+    c2 = BERT_BASE.scaled(dtype="float32")
+    sp = init_params(c1, jax.random.PRNGKey(0))
+    lg = init_ligo_params(jax.random.PRNGKey(1), c1, c2)
+    f = jax.jit(lambda l, s: apply_ligo(l, s, c1, c2))
+    us = _time(f, lg, sp, iters=3)
+    rows.append(("apply_ligo[bert-small->base]", us,
+                 f"{c2.param_count() / 1e6:.0f}Mparam_out"))
+    return rows

@@ -1,0 +1,190 @@
+"""Growth-convergence laboratory — the engine behind the paper-reproduction
+benchmarks (Fig. 2/3/6, Tables 1/3 analogues at CPU proxy scale).
+
+Protocol (mirrors the paper §4.1, scaled down):
+ 1. pretrain the small model on the synthetic markov corpus;
+ 2. grow with each method (scratch / StackBERT / interpolation / bert2BERT /
+    LiGO, the latter with K SGD steps on the growth operator);
+ 3. train the large model, tracking held-out eval loss vs cumulative FLOPs
+    (6·N_active·D per token; the LiGO phase's extra FLOPs are charged as in
+    Table 3);
+ 4. savings(method) = 1 − FLOPs_method(reach scratch's final eval loss)
+    / FLOPs_scratch(total), matching the paper's headline metric.
+
+Results are cached as JSON under artifacts/bench/ keyed by a config hash, so
+benchmarks.run and EXPERIMENTS.md regeneration are cheap.
+"""
+from __future__ import annotations
+
+import hashlib
+import itertools
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import grow
+from repro.data import batch_for_step
+from repro.models import init_params, loss_fn
+from repro.optim import adamw_init
+from repro.training import make_train_step
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts", "bench")
+
+PROXY_SMALL = ModelConfig(
+    name="proxy-small", family="dense", n_layers=4, d_model=64, n_heads=4,
+    n_kv_heads=4, d_head=16, d_ff=256, vocab_size=256, rope="rope",
+    rope_theta=10000.0, act="gelu", norm="layer", dtype="float32",
+    max_seq=128, objective="clm")
+PROXY_BIG = PROXY_SMALL.scaled(
+    name="proxy-big", n_layers=8, d_model=128, n_heads=8, d_head=16,
+    d_ff=512)
+
+METHODS = ("scratch", "stackbert", "interpolation", "bert2bert", "ligo")
+
+
+@dataclass
+class LabConfig:
+    small: ModelConfig = PROXY_SMALL
+    big: ModelConfig = PROXY_BIG
+    batch: int = 32
+    seq: int = 64
+    pretrain_steps: int = 500
+    train_steps: int = 700
+    eval_every: int = 20
+    eval_batches: int = 4
+    lr: float = 3e-3
+    ligo_steps: int = 100
+    ligo_lr: float = 3e-3
+    seed: int = 0
+
+    def key(self) -> str:
+        blob = json.dumps({
+            "small": self.small.config_hash(), "big": self.big.config_hash(),
+            **{k: getattr(self, k) for k in (
+                "batch", "seq", "pretrain_steps", "train_steps", "eval_every",
+                "eval_batches", "lr", "ligo_steps", "ligo_lr", "seed")},
+        }, sort_keys=True)
+        return hashlib.sha1(blob.encode()).hexdigest()[:12]
+
+
+def flops_per_token(cfg: ModelConfig) -> float:
+    return 6.0 * cfg.active_param_count()
+
+
+def _batches(cfg, lab: LabConfig, start: int, seed: int):
+    for s in itertools.count(start):
+        yield {k: jnp.asarray(v) for k, v in
+               batch_for_step(cfg, s, lab.batch, lab.seq, seed=seed).items()}
+
+
+def _eval_loss(params, cfg, lab: LabConfig) -> float:
+    tot = 0.0
+    for i in range(lab.eval_batches):
+        b = {k: jnp.asarray(v) for k, v in
+             batch_for_step(cfg, 10_000_000 + i, lab.batch, lab.seq,
+                            seed=lab.seed + 777).items()}
+        tot += float(loss_fn(params, cfg, b)[0])
+    return tot / lab.eval_batches
+
+
+def pretrain_small(lab: LabConfig):
+    tcfg = TrainConfig(steps=lab.pretrain_steps, warmup_steps=20, lr=lab.lr)
+    params, opt = init_params(lab.small, jax.random.PRNGKey(lab.seed)), None
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(lab.small, tcfg))
+    it = _batches(lab.small, lab, 0, lab.seed)
+    for i in range(lab.pretrain_steps):
+        params, opt, _ = step(params, opt, next(it), jnp.asarray(i))
+    return params
+
+
+def run_method(method: str, small_params, lab: LabConfig, *,
+               ligo_steps: Optional[int] = None,
+               depth_only: bool = False) -> Dict:
+    """Grow + train; returns {"evals": [(step, loss)], "extra_flops": float}."""
+    ligo_steps = lab.ligo_steps if ligo_steps is None else ligo_steps
+    key = jax.random.PRNGKey(lab.seed + hash(method) % 1000)
+    extra_flops = 0.0
+    t0 = time.time()
+    if method == "scratch":
+        big = init_params(lab.big, key)
+    else:
+        it = _batches(lab.small, lab, 500_000, lab.seed)
+        big, info = grow(small_params, lab.small, lab.big, method=method,
+                         key=key, data_it=it,
+                         ligo_steps=ligo_steps if method == "ligo" else 0,
+                         ligo_lr=lab.ligo_lr)
+        if method == "ligo":
+            # LiGO phase: fwd+bwd of the big model per step (paper Tab. 3)
+            extra_flops = (ligo_steps * 3 * flops_per_token(lab.big)
+                           * lab.batch * lab.seq)
+    tcfg = TrainConfig(steps=lab.train_steps, warmup_steps=30, lr=lab.lr)
+    opt = adamw_init(big)
+    step = jax.jit(make_train_step(lab.big, tcfg))
+    it = _batches(lab.big, lab, 0, lab.seed + 1)
+    evals: List[Tuple[int, float]] = [(0, _eval_loss(big, lab.big, lab))]
+    for i in range(lab.train_steps):
+        big, opt, _ = step(big, opt, next(it), jnp.asarray(i))
+        if (i + 1) % lab.eval_every == 0:
+            evals.append((i + 1, _eval_loss(big, lab.big, lab)))
+    return {"method": method, "evals": evals, "extra_flops": extra_flops,
+            "wall_s": round(time.time() - t0, 1), "params": None,
+            "final_params": big}
+
+
+def step_flops(lab: LabConfig) -> float:
+    """Train-step FLOPs of the big model (fwd+bwd ≈ 3× fwd)."""
+    return 3 * flops_per_token(lab.big) * lab.batch * lab.seq
+
+
+def savings_table(results: Dict[str, Dict], lab: LabConfig) -> Dict[str, Dict]:
+    """FLOPs/steps savings vs scratch, at scratch's final eval loss."""
+    scratch = results["scratch"]
+    target = scratch["evals"][-1][1]
+    total_scratch = lab.train_steps * step_flops(lab)
+    out = {}
+    for m, r in results.items():
+        reach = next((s for s, l in r["evals"] if l <= target), None)
+        if reach is None:
+            out[m] = {"target": target, "reach_step": None, "savings": None,
+                      "final": r["evals"][-1][1]}
+            continue
+        used = reach * step_flops(lab) + r["extra_flops"]
+        out[m] = {"target": round(target, 4), "reach_step": reach,
+                  "savings": round(1 - used / total_scratch, 4),
+                  "final": round(r["evals"][-1][1], 4)}
+    return out
+
+
+def run_lab(lab: LabConfig, methods=METHODS, *, cache_tag: str = "fig2",
+            force: bool = False) -> Dict:
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, f"{cache_tag}_{lab.key()}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    small = pretrain_small(lab)
+    small_eval = _eval_loss(small, lab.small, lab)
+    results = {}
+    for m in methods:
+        r = run_method(m, small, lab)
+        r.pop("final_params")
+        results[m] = r
+        print(f"[lab:{cache_tag}] {m:14s} final={r['evals'][-1][1]:.4f} "
+              f"wall={r['wall_s']}s", flush=True)
+    table = savings_table(results, lab)
+    out = {"lab_key": lab.key(), "small_eval": small_eval,
+           "results": {m: {k: v for k, v in r.items()}
+                       for m, r in results.items()},
+           "savings": table}
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out

@@ -1,0 +1,136 @@
+"""§Perf hillclimbing harness: hypothesis → change → re-lower → validate.
+
+Three cells (chosen per the assignment):
+- llama3-8b/train_4k      — most representative of the paper's technique
+                            (the dense-LM growth target);
+- mixtral-8x7b/train_4k   — most collective-bound baseline (103 s modelled);
+- qwen3-moe/train_4k      — worst roofline fraction (0.005).
+
+Each iteration is a *tuning dict* interpreted by launch.dryrun.build_cell
+(sharding/layout/numerics changes — no model edits), so before/after use the
+identical cell definition. Results + hypothesis verdicts land in
+artifacts/hillclimb.json and EXPERIMENTS.md §Perf.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb [--cell llama3-8b/train_4k]
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts")
+
+SP = {"seq_shard": True}
+BF = {"bf16_cotangent": True}
+MOE = {"moe_layout": "tp_ep", "moe_data_shard": True}
+
+PLANS = {
+    "llama3-8b/train_4k": [
+        ("sp", {**SP},
+         "shard the residual-stream scan carries over the model axis "
+         "(Megatron sequence parallelism): saved activations /16 => memory "
+         "term ~10.4s -> ~4s, peak 51.6GiB -> fits; collective ~unchanged "
+         "(AR <-> RS+AG equal wire bytes)"),
+        ("sp_bf16cot", {**SP, **BF},
+         "CE loss is fp32 so the whole backward runs fp32 cotangents; a "
+         "bf16 grad gate before unembed halves backward activation "
+         "all-reduce bytes: collective ~11.5s -> ~7s"),
+        ("sp_bf16cot_attn1024", {**SP, **BF, "chunk_q": 1024,
+                                 "chunk_k": 1024},
+         "smaller flash blocks quarter the live fp32 score buffers: peak "
+         "drops further (traffic roughly unchanged)"),
+        ("sp_pbf16", {**SP, "p_bf16": True},
+         "the dominant remaining HBM stream is the fp32 softmax-weights "
+         "block (p) written+read around the PV matmul: casting p to bf16 "
+         "for the contraction halves that stream => memory ~5.8s -> ~4s"),
+    ],
+    "mixtral-8x7b/train_4k": [
+        ("tp_ep", {**MOE},
+         "[REFUTED] shard the expert stack's layer dim over data for FSDP: "
+         "GSPMD all-gathers the whole 90GB stack before the scan "
+         "(peak 183GiB) — L-dim FSDP inside lax.scan is an anti-pattern"),
+        ("shardmap", {"moe_shardmap": True},
+         "[after wgather/dshard variants also regressed] replace the GSPMD "
+         "dense dispatch with the explicit-collective shard_map MoE "
+         "(virtual-expert replication rep=2 for E=8 on the 16-way data "
+         "axis): all-to-alls replace the 2.3TB partial-sum all-reduces => "
+         "collective 103s -> ~10s"),
+        ("shardmap_sp", {"moe_shardmap": True, **SP},
+         "add sequence-parallel carries: memory 28s -> <10s, peak fits"),
+        ("shardmap_sp_cf1", {"moe_shardmap": True, **SP,
+                             "capacity_factor": 1.0},
+         "cf 1.25 -> 1.0: expert FLOPs and buffer traffic scale with cf"),
+    ],
+    "qwen3-moe-30b-a3b/train_4k": [
+        ("shardmap", {"moe_shardmap": True},
+         "explicit-collective shard_map MoE, experts 128/16 over the data "
+         "axis (EP), capacity model-sliced: collective 83s -> <15s and the "
+         "16x replicated expert compute disappears"),
+        ("shardmap_sp", {"moe_shardmap": True, **SP},
+         "sequence-parallel carries: memory 30.6s -> <10s"),
+        ("shardmap_sp_cf1", {"moe_shardmap": True, **SP,
+                             "capacity_factor": 1.0},
+         "cf 1.0: ~20% off expert compute/traffic"),
+        ("shardmap_v2_sp_cf1", {"moe_shardmap": True, **SP,
+                                "capacity_factor": 1.0},
+         "[code change in moe_shardmap] (a) build only this model shard's "
+         "capacity slice (1/16th of the buffer ever exists), (b) sort-based "
+         "position-in-expert replaces the O(N·k·E) one-hot cumsum "
+         "(268MB/layer): memory 22s -> target <12s, peak fits"),
+    ],
+}
+
+
+def run(cell_key: str, mesh: str = "single"):
+    from repro.launch.dryrun import run_cell
+    from repro.roofline.analysis import analyse_cell
+    arch, shape = cell_key.split("/")
+    out = {"cell": cell_key, "iterations": []}
+
+    # baseline from the recorded sweep
+    base_path = os.path.join(ART, "dryrun", mesh, arch, f"{shape}.json")
+    with open(base_path) as f:
+        base = analyse_cell(json.load(f))
+    out["baseline"] = base
+    print(f"== {cell_key} baseline: compute={base['compute_s']:.2f}s "
+          f"memory={base['memory_s']:.2f}s coll={base['collective_s']:.2f}s "
+          f"peak={base['peak_gib']:.1f}GiB frac={base['roofline_fraction']:.4f}",
+          flush=True)
+
+    for name, tuning, hypothesis in PLANS[cell_key]:
+        print(f"-- iter {name}: {hypothesis[:100]}...", flush=True)
+        rec = run_cell(arch, shape, mesh, tuning=tuning, tag=f"hc-{name}")
+        an = analyse_cell(rec)
+        an["tuning"] = tuning
+        an["hypothesis"] = hypothesis
+        out["iterations"].append({"name": name, **an})
+        print(f"   -> compute={an['compute_s']:.2f}s memory={an['memory_s']:.2f}s "
+              f"coll={an['collective_s']:.2f}s peak={an['peak_gib']:.1f}GiB "
+              f"frac={an['roofline_fraction']:.4f} fits={an['fits_hbm']}",
+              flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, choices=list(PLANS) + [None])
+    args = ap.parse_args()
+    cells = [args.cell] if args.cell else list(PLANS)
+    results = []
+    path = os.path.join(ART, "hillclimb.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            results = json.load(f)
+        results = [r for r in results if r["cell"] not in cells]
+    for c in cells:
+        results.append(run(c))
+    with open(path, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"saved {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Batched serving with KV caches across architecture families.
+
+Prefill + incremental decode for a dense GQA model, a sliding-window MoE
+(ring-buffer cache) and an SSM hybrid (constant-size state) — the three cache
+disciplines in the framework.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ASSIGNED, smoke_config
+from repro.data import gen_tokens
+from repro.models.model import decode_step, init_params, prefill
+
+
+def serve(arch: str, batch=2, prompt_len=48, gen=12):
+    cfg = smoke_config(ASSIGNED[arch])
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = jnp.asarray(
+        gen_tokens(0, 0, batch, prompt_len, cfg.vocab_size)[:, :prompt_len],
+        jnp.int32)
+    b = {"tokens": prompts}
+    if cfg.modality == "vlm":
+        b["patch_embeds"] = jnp.zeros((batch, min(cfg.num_patches, prompt_len),
+                                       cfg.d_model), jnp.float32)
+        b["positions"] = jnp.asarray(
+            np.broadcast_to(np.arange(prompt_len)[None, :, None],
+                            (batch, prompt_len, 3)).copy(), jnp.int32)
+    logits, state = jax.jit(
+        lambda p, bb: prefill(p, cfg, bb, max_len=prompt_len + gen))(params, b)
+    dstep = jax.jit(lambda p, s, bb: decode_step(p, cfg, s, bb))
+    toks = jnp.argmax(logits, -1)[:, None]
+    t0 = time.perf_counter()
+    out = [toks]
+    for i in range(gen - 1):
+        db = {"tokens": toks}
+        if cfg.modality == "vlm":
+            db["positions"] = jnp.full((batch, 1, 3), prompt_len + i,
+                                       jnp.int32)
+        logits, state = dstep(params, state, db)
+        toks = jnp.argmax(logits, -1)[:, None]
+        out.append(toks)
+    jax.block_until_ready(toks)
+    dt = time.perf_counter() - t0
+    seq = np.asarray(jnp.concatenate(out, 1)[0])
+    print(f"{arch:20s} cache={type(state['caches']).__name__:5s} "
+          f"{batch * (gen - 1) / dt:7.1f} tok/s  sample={seq[:8]}")
+
+
+if __name__ == "__main__":
+    print("arch                 cache        tok/s  sample")
+    serve("llama3-8b")        # dense GQA: linear KV cache
+    serve("mixtral-8x7b")     # SWA MoE:   ring-buffer KV cache
+    serve("zamba2-2.7b")      # hybrid:    SSM states + shared-attn cache
+    serve("xlstm-125m")       # ssm:       recurrent matrix/scalar memories

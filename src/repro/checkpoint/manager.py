@@ -1,0 +1,89 @@
+"""CheckpointManager: async writes, retention, elastic restore.
+
+- ``save(step, tree, meta)``: snapshot to host (cheap device_get) then write
+  on a background thread; the train loop never blocks on disk.
+- retention: keep the newest ``keep`` checkpoints.
+- ``restore_latest(template, shardings=None)``: loads into any mesh — arrays
+  are ``jax.device_put`` with the *target* sharding, so a job checkpointed on
+  N devices restarts on M devices (elastic scaling / shrunk-fleet recovery).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint import io
+
+Params = Any
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Params, meta: Optional[Dict] = None,
+             *, block: bool = False) -> None:
+        host_flat = io.flatten_tree(tree)   # synchronous device->host snapshot
+        self.wait()                          # one write in flight at a time
+
+        def write():
+            try:
+                import os
+                import shutil
+                io.save_step(self.dir, step, host_flat, meta)
+                steps = io.list_steps(self.dir)
+                for s in steps[:-self.keep]:
+                    shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                                  ignore_errors=True)
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        if self.async_write and not block:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = io.list_steps(self.dir)
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, template: Params,
+                shardings: Optional[Params] = None
+                ) -> Tuple[Params, Dict]:
+        flat, meta = io.load_step(self.dir, step)
+        tree = io.unflatten_into(template, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda arr, sh: jax.device_put(arr, sh), tree, shardings)
+        else:
+            tree = jax.tree.map(
+                lambda arr, t: jax.numpy.asarray(arr, dtype=t.dtype),
+                tree, template)
+        return tree, meta
+
+    def restore_latest(self, template: Params,
+                       shardings: Optional[Params] = None
+                       ) -> Optional[Tuple[Params, Dict]]:
+        step = self.latest_step()
+        if step is None:
+            return None
+        return self.restore(step, template, shardings)

@@ -1,0 +1,144 @@
+"""Config registry: assigned architectures, paper models, smoke reductions, cells."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.configs.base import (ALL_SHAPES, ATTN, MAMBA2, MLSTM, MOE, SLSTM,
+                                ModelConfig, ShapeConfig, TrainConfig,
+                                TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+from repro.configs import (deepseek_coder_33b, hubert_xlarge, llama3_8b,
+                           mixtral_8x7b, phi4_mini_3_8b, qwen2_vl_72b,
+                           qwen3_moe_30b_a3b, starcoder2_7b, xlstm_125m,
+                           zamba2_2_7b)
+from repro.configs.paper_models import GROWTH_PAIRS, PAPER_MODELS
+
+ASSIGNED: Dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (hubert_xlarge, llama3_8b, phi4_mini_3_8b, starcoder2_7b,
+              deepseek_coder_33b, mixtral_8x7b, qwen3_moe_30b_a3b, xlstm_125m,
+              zamba2_2_7b, qwen2_vl_72b)
+}
+
+REGISTRY: Dict[str, ModelConfig] = {**ASSIGNED, **PAPER_MODELS}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def list_archs() -> List[str]:
+    return sorted(ASSIGNED)
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests (tiny dims, same structure)."""
+    n_layers = max(2, 2 * len(cfg.block_pattern))
+    return cfg.scaled(
+        name=cfg.name + "-smoke",
+        n_layers=n_layers,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        d_head=16,
+        d_ff=0 if cfg.d_ff == 0 else 128,
+        vocab_size=128,
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        experts_top_k=min(cfg.experts_top_k, 2) if cfg.experts_top_k else 0,
+        moe_d_ff=64 if cfg.n_experts else 0,
+        capacity_factor=8.0,   # no token dropping in smoke numerics tests
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        window=min(cfg.window, 32) if cfg.window else 0,
+        shared_attn_every=2,
+        frontend_dim=64 if cfg.frontend_dim else 0,
+        num_patches=8 if cfg.num_patches else 0,
+        mrope_sections=(2, 3, 3),
+        dtype="float32",
+        max_seq=256,
+    )
+
+
+def _mrope_for(d_head: int, base=(16, 24, 24)):
+    half = d_head // 2
+    t = max(1, half * base[0] // sum(base))
+    h = (half - t) // 2
+    return (t, h, half - t - h)
+
+
+def grow_target(cfg: ModelConfig, *, layers_mult: int = 2,
+                width_mult: float = 1.5) -> ModelConfig:
+    """A valid larger same-family config (LiGO growth target) for any arch."""
+    d_model = int(cfg.d_model * width_mult)
+    d_head = int(cfg.d_head * width_mult)
+    return cfg.scaled(
+        name=cfg.name + "-grown",
+        n_layers=cfg.n_layers * layers_mult,
+        d_model=d_model,
+        d_head=d_head,
+        d_ff=0 if cfg.d_ff == 0 else int(cfg.d_ff * width_mult),
+        moe_d_ff=int(cfg.moe_d_ff * width_mult) if cfg.n_experts else 0,
+        mrope_sections=_mrope_for(d_head) if cfg.rope == "mrope"
+        else cfg.mrope_sections,
+    )
+
+
+def half_config(cfg: ModelConfig) -> ModelConfig:
+    """The smaller pretrained source model for growing into ``cfg`` (the
+    paper's setting: the source is roughly half depth / ~2/3 width)."""
+    d_head = max(cfg.d_head // 2, 8)
+    return cfg.scaled(
+        name=cfg.name + "-half",
+        n_layers=cfg.n_layers // 2,
+        d_model=cfg.d_model // 2,
+        d_head=d_head,
+        d_ff=0 if cfg.d_ff == 0 else cfg.d_ff // 2,
+        moe_d_ff=cfg.moe_d_ff // 2 if cfg.n_experts else 0,
+        mrope_sections=_mrope_for(d_head) if cfg.rope == "mrope"
+        else cfg.mrope_sections,
+        shared_attn_every=cfg.shared_attn_every,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Dry-run cell enumeration (arch × shape, with principled skips — DESIGN.md §4)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    runnable: bool
+    skip_reason: str = ""
+
+    @property
+    def key(self) -> str:
+        return f"{self.arch}/{self.shape.name}"
+
+
+def cell_status(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    if shape.kind == "decode" and cfg.encoder_only:
+        return False, "encoder-only arch has no decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch; 500k decode needs sub-quadratic attention"
+    return True, ""
+
+
+def enumerate_cells() -> List[Cell]:
+    cells = []
+    for arch in sorted(ASSIGNED):
+        cfg = ASSIGNED[arch]
+        for shape in ALL_SHAPES:
+            ok, why = cell_status(cfg, shape)
+            cells.append(Cell(arch, shape, ok, why))
+    return cells
+
+
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+__all__ = [
+    "ASSIGNED", "REGISTRY", "PAPER_MODELS", "GROWTH_PAIRS", "ModelConfig",
+    "ShapeConfig", "TrainConfig", "get_config", "list_archs", "smoke_config",
+    "Cell", "enumerate_cells", "cell_status", "SHAPES", "ALL_SHAPES",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+]

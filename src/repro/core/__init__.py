@@ -1,0 +1,10 @@
+"""LiGO — the paper's primary contribution: a learned linear growth operator
+that initialises a large transformer from a smaller pretrained one."""
+from repro.core.ligo import (apply_ligo, count_ligo_params, gamma_expand,
+                             init_ligo_params, interp_pattern, stack_pattern)
+from repro.core.grow import grow, ligo_loss, train_ligo
+from repro.core import operators, spec
+
+__all__ = ["apply_ligo", "init_ligo_params", "count_ligo_params",
+           "gamma_expand", "stack_pattern", "interp_pattern", "grow",
+           "ligo_loss", "train_ligo", "operators", "spec"]

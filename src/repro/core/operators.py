@@ -1,0 +1,140 @@
+"""Classical growth operators as special cases of LiGO (paper Prop. 1, App. A).
+
+Each constructor returns a LiGO parameter tree; feeding it to ``apply_ligo``
+reproduces the classical operator exactly. This both implements the paper's
+baselines (StackBERT, Interpolation, Net2Net/bert2BERT-FPI) and serves as the
+executable proof of Proposition 1 (tests assert operator equality against the
+direct formulas).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import spec as S
+from repro.core.ligo import (init_ligo_params, interp_pattern, stack_pattern)
+
+
+def _identity_width(cfg1: ModelConfig, cfg2: ModelConfig) -> Dict:
+    d1s, d2s = S.width_dims(cfg1), S.width_dims(cfg2)
+    assert d1s == d2s, "identity width requires equal dims (depth-only growth)"
+    return {n: jnp.eye(d) for n, d in d1s.items()}
+
+
+def _depth(cfg1, cfg2, pattern) -> Dict:
+    counts1: Dict[str, int] = {}
+    counts2: Dict[str, int] = {}
+    for k in cfg1.blocks:
+        counts1[k] = counts1.get(k, 0) + 1
+    for k in cfg2.blocks:
+        counts2[k] = counts2.get(k, 0) + 1
+    return {kind: {leaf: pattern(counts2[kind], counts1[kind])
+                   for leaf in S.layer_spec(kind, cfg1, cfg2)}
+            for kind in counts1}
+
+
+def _copy_width(key, cfg1: ModelConfig, cfg2: ModelConfig,
+                normalized: bool) -> Dict:
+    """Selection-copy width expanders (direct copy, Wei et al. 2016); with
+    ``normalized`` fan-in they become Net2Net/FPI."""
+    d1s, d2s = S.width_dims(cfg1), S.width_dims(cfg2)
+    keys = jax.random.split(key, len(d2s))
+    width = {}
+    for i, name in enumerate(sorted(d2s)):
+        block = cfg1.d_head if name in ("q", "k", "v") else 1
+        if cfg1.d_head != cfg2.d_head and name in ("q", "k", "v"):
+            raise ValueError("selection copying needs equal d_head")
+        B, B_norm = _selection(keys[i], d2s[name], d1s[name], block=block)
+        width[name] = B
+        width[f"{name}__in"] = B_norm if normalized else B
+    return width
+
+
+def stackbert_operator(cfg1: ModelConfig, cfg2: ModelConfig,
+                       key=None) -> Dict:
+    """Depth growth by block duplication (Gong et al. 2019), Eq. 1.
+
+    When the target is also wider (the paper's BERT-Small→Base setting),
+    width is handled by unnormalised direct copy — the classical recipe."""
+    d1s, d2s = S.width_dims(cfg1), S.width_dims(cfg2)
+    if d1s == d2s:
+        width = _identity_width(cfg1, cfg2)
+    else:
+        width = _copy_width(key if key is not None else jax.random.PRNGKey(0),
+                            cfg1, cfg2, normalized=False)
+    return {"width": width, "depth": _depth(cfg1, cfg2, stack_pattern)}
+
+
+def interpolation_operator(cfg1: ModelConfig, cfg2: ModelConfig,
+                           key=None) -> Dict:
+    """Depth growth by layer interleaving (Chang et al. 2017), Eq. 1."""
+    d1s, d2s = S.width_dims(cfg1), S.width_dims(cfg2)
+    if d1s == d2s:
+        width = _identity_width(cfg1, cfg2)
+    else:
+        width = _copy_width(key if key is not None else jax.random.PRNGKey(0),
+                            cfg1, cfg2, normalized=False)
+    return {"width": width, "depth": _depth(cfg1, cfg2, interp_pattern)}
+
+
+# ---------------------------------------------------------------------------
+# Net2Net width expansion (Chen et al. 2015), Eq. 2 / App. A Eq. 11-12
+# ---------------------------------------------------------------------------
+def _selection(key, d2: int, d1: int, *, block: int = 1
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Selection-based expander [I; S] and its normalised (in-role) version.
+
+    ``block``: granularity of duplication (e.g. d_head for head-aligned
+    copying — required for function preservation through attention).
+    """
+    assert d2 % block == 0 and d1 % block == 0
+    n1, n2 = d1 // block, d2 // block
+    src = jax.random.randint(key, (n2 - n1,), 0, n1)
+    sel_units = jnp.concatenate([jnp.arange(n1), src])         # (n2,)
+    B_units = jax.nn.one_hot(sel_units, n1)                    # (n2, n1)
+    counts = jnp.sum(B_units, axis=0)                          # copies per unit
+    B = jnp.kron(B_units, jnp.eye(block))
+    B_norm = jnp.kron(B_units / counts[None, :], jnp.eye(block))
+    return B, B_norm
+
+
+def net2net_operator(key, cfg1: ModelConfig, cfg2: ModelConfig,
+                     *, depth: Optional[str] = None) -> Dict:
+    """Width growth by neuron duplication with normalised fan-in (Net2Net);
+    optionally composed with a depth pattern ('stack' → bert2BERT-style FPI).
+
+    Out-expanders are raw selections; in-expanders are the count-normalised
+    selections stored as ``<name>__in`` (untied — exactly App. A Eq. 12).
+    """
+    d1s, d2s = S.width_dims(cfg1), S.width_dims(cfg2)
+    keys = jax.random.split(key, len(d2s))
+    width = {}
+    for i, name in enumerate(sorted(d2s)):
+        block = cfg1.d_head if name in ("q", "k", "v") else 1
+        if cfg1.d_head != cfg2.d_head and name in ("q", "k", "v"):
+            raise ValueError("Net2Net head copying needs equal d_head")
+        B, B_norm = _selection(keys[i], d2s[name], d1s[name], block=block)
+        width[name] = B
+        width[f"{name}__in"] = B_norm
+    if depth is None:
+        pattern = lambda L2, L1: jnp.eye(L1)  # noqa: E731 (width-only)
+    else:
+        pattern = stack_pattern if depth == "stack" else interp_pattern
+    return {"width": width, "depth": _depth(cfg1, cfg2, pattern)}
+
+
+def bert2bert_operator(key, cfg1: ModelConfig, cfg2: ModelConfig) -> Dict:
+    """bert2BERT(FPI): Net2Net width + StackBERT depth (Chen et al. 2021)."""
+    return net2net_operator(key, cfg1, cfg2, depth="stack")
+
+
+# ---------------------------------------------------------------------------
+# Direct formulas (oracles for the Prop.-1 equality tests)
+# ---------------------------------------------------------------------------
+def direct_depth_map(stack_params, pattern_idx: np.ndarray):
+    """new_stack[i] = stack[pattern_idx[i]] — direct layer rearrangement."""
+    return jax.tree.map(lambda a: a[jnp.asarray(pattern_idx)], stack_params)

@@ -1,0 +1,163 @@
+"""LiGO expansion specs: which expander grows which tensor axis.
+
+The paper's tying scheme (§3.3, Alg. 1) assigns every transformer weight an
+in-dimension expander ``A`` and out-dimension expander ``B``, with most of them
+tied to the embedding expander ``B_emb``:
+
+    A^{Q,K,V} = B_emb,  A^O = Γ(B_v),  B^O = B_emb,
+    A^{fc1} = B_emb,    A^{fc2} = B_fc1,  B^{fc2} = B_emb,
+    norms / biases inherit their module's out-expander,
+    tok-embedding out-dim and head in-dim grow with B_emb.
+
+``Γ`` (GQA group expansion, kv-head space → query-head space) degenerates to
+the identity mapping for MHA, recovering the paper exactly. Extensions for
+SSM / MoE / xLSTM families are documented in DESIGN.md §4 (beyond-paper).
+
+A spec entry is ``(in_expr, out_expr)`` where an expr is:
+  - None                      identity (axis not grown)
+  - "emb" | "q" | "k" | "v" | "fc" | "inner" | "mheads" | "xheads"
+                              a learnable width matrix by name
+  - ("gamma", "v")            GQA group-expanded value expander
+  - ("seg", [(expr, n1, n2), ...])
+                              block-diagonal over column segments
+Vectors (per-layer 1-D leaves) use only ``out_expr``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+
+Expr = Any
+Spec = Tuple[Expr, Expr]
+
+
+def width_dims(cfg: ModelConfig) -> Dict[str, int]:
+    """Dimension of each expander's space for a given config."""
+    d = {
+        "emb": cfg.d_model,
+        "q": cfg.n_heads * cfg.d_head,
+        "k": cfg.n_kv_heads * cfg.d_head,
+        "v": cfg.n_kv_heads * cfg.d_head,
+    }
+    if cfg.d_ff > 0 or cfg.moe_d_ff > 0:
+        d["fc"] = cfg.moe_d_ff if cfg.n_experts else cfg.d_ff
+    if cfg.family in ("ssm", "hybrid"):
+        d["inner"] = cfg.ssm_expand * cfg.d_model
+    if cfg.family == "hybrid":
+        d["mheads"] = cfg.mamba_heads
+    if cfg.family == "ssm":
+        d["xheads"] = cfg.n_heads
+    return d
+
+
+def _attn_spec(cfg1: ModelConfig) -> Dict[str, Spec]:
+    s = {
+        "ln1/scale": (None, "emb"), "ln1/bias": (None, "emb"),
+        "ln2/scale": (None, "emb"), "ln2/bias": (None, "emb"),
+        "wq": ("emb", "q"), "bq": (None, "q"),
+        "wk": ("emb", "k"), "bk": (None, "k"),
+        "wv": ("emb", "v"), "bv": (None, "v"),
+        "wo": (("gamma", "v"), "emb"), "bo": (None, "emb"),
+    }
+    if cfg1.d_ff > 0:
+        s.update({
+            "mlp/w1": ("emb", "fc"), "mlp/b1": (None, "fc"),
+            "mlp/w3": ("emb", "fc"),
+            "mlp/w2": ("fc", "emb"), "mlp/b2": (None, "emb"),
+        })
+    return s
+
+
+def _moe_spec(cfg1: ModelConfig) -> Dict[str, Spec]:
+    s = _attn_spec(cfg1)
+    s.update({
+        "moe/router": ("emb", None),        # expert count is not grown
+        "moe/w1": ("emb", "fc"),            # (E, D, F): E broadcast
+        "moe/w3": ("emb", "fc"),
+        "moe/w2": ("fc", "emb"),
+    })
+    return s
+
+
+def _mlstm_spec(cfg1: ModelConfig, cfg2: ModelConfig) -> Dict[str, Spec]:
+    di1, di2 = cfg1.ssm_expand * cfg1.d_model, cfg2.ssm_expand * cfg2.d_model
+    H1, H2 = cfg1.n_heads, cfg2.n_heads
+    return {
+        "ln/scale": (None, "emb"), "ln/bias": (None, "emb"),
+        "up": ("emb", ("seg", [("inner", di1, di2), ("inner", di1, di2)])),
+        "conv": (None, "inner"),
+        "wqkv": ("inner", ("seg", [("inner", di1, di2)] * 3)),
+        "gates": ("inner", ("seg", [("xheads", H1, H2)] * 2)),
+        "gates_b": (None, ("seg", [("xheads", H1, H2)] * 2)),
+        "down": ("inner", "emb"),
+    }
+
+
+def _slstm_spec(cfg1: ModelConfig, cfg2: ModelConfig) -> Dict[str, Spec]:
+    D1, D2 = cfg1.d_model, cfg2.d_model
+    seg4 = ("seg", [("emb", D1, D2)] * 4)
+    return {
+        "ln/scale": (None, "emb"), "ln/bias": (None, "emb"),
+        "w": ("emb", seg4), "r": ("emb", seg4), "b": (None, seg4),
+        "out": ("emb", "emb"),
+    }
+
+
+def _mamba2_spec(cfg1: ModelConfig, cfg2: ModelConfig) -> Dict[str, Spec]:
+    di1, di2 = cfg1.ssm_expand * cfg1.d_model, cfg2.ssm_expand * cfg2.d_model
+    N = cfg1.ssm_state
+    assert N == cfg2.ssm_state, "ssm_state is architectural; not grown"
+    H1, H2 = cfg1.mamba_heads, cfg2.mamba_heads
+    in_seg = ("seg", [("inner", di1, di2), ("inner", di1, di2),
+                      (None, N, N), (None, N, N), ("mheads", H1, H2)])
+    conv_seg = ("seg", [("inner", di1, di2), (None, N, N), (None, N, N)])
+    return {
+        "ln/scale": (None, "emb"), "ln/bias": (None, "emb"),
+        "in_proj": ("emb", in_seg),
+        "conv": (None, conv_seg),
+        "A_log": (None, "mheads"), "Dskip": (None, "mheads"),
+        "dt_bias": (None, "mheads"),
+        "gn/scale": (None, "inner"),
+        "out_proj": ("inner", "emb"),
+    }
+
+
+def layer_spec(kind: str, cfg1: ModelConfig, cfg2: ModelConfig
+               ) -> Dict[str, Spec]:
+    if kind in ("attn", "shared_attn"):
+        return _attn_spec(cfg1)
+    if kind == "moe":
+        return _moe_spec(cfg1)
+    if kind == "mlstm":
+        return _mlstm_spec(cfg1, cfg2)
+    if kind == "slstm":
+        return _slstm_spec(cfg1, cfg2)
+    if kind == "mamba2":
+        return _mamba2_spec(cfg1, cfg2)
+    raise KeyError(kind)
+
+
+def top_spec() -> Dict[str, Spec]:
+    """Specs for non-layer parameters."""
+    return {
+        "embed/tok": (None, "emb"),          # (V, D): vocab unchanged
+        "embed/pos": (None, "emb"),
+        "embed/mask_emb": (None, "emb"),
+        "embed/cls": (None, "emb"),
+        "final_norm/scale": (None, "emb"),
+        "final_norm/bias": (None, "emb"),
+        "head": ("emb", None),               # (D, V|C): classes unchanged
+    }
+
+
+def check_growable(cfg1: ModelConfig, cfg2: ModelConfig) -> None:
+    assert cfg1.family == cfg2.family, (cfg1.family, cfg2.family)
+    assert tuple(cfg1.block_pattern) == tuple(cfg2.block_pattern)
+    assert cfg1.vocab_size == cfg2.vocab_size
+    assert cfg1.n_layers <= cfg2.n_layers
+    assert cfg1.d_model <= cfg2.d_model
+    assert cfg1.objective == cfg2.objective
+    assert cfg1.tie_embeddings == cfg2.tie_embeddings
+    if cfg1.n_experts:
+        assert cfg1.n_experts == cfg2.n_experts, "expert count is not grown"

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (batch_for_step, data_iterator, gen_tokens,
+                                  optimal_loss)
+from repro.data.pipeline import GlobalBatchLoader, Prefetcher
+
+__all__ = ["batch_for_step", "data_iterator", "gen_tokens", "optimal_loss",
+           "GlobalBatchLoader", "Prefetcher"]

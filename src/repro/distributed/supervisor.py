@@ -1,0 +1,125 @@
+"""Fault-tolerant training supervision: restart, stragglers, elasticity.
+
+At thousand-node scale the steady state is "something is always broken". The
+supervisor wraps the step loop with:
+
+- **checkpoint/restart**: periodic async checkpoints; on any step failure the
+  loop restores the latest checkpoint and replays from there. The synthetic
+  data pipeline is a pure function of the step index, so recovery is exactly
+  deterministic (same batches, same trajectory).
+- **straggler watchdog**: per-step wall time EWMA + deviation; steps slower
+  than ``ewma + z·dev`` are flagged and counted. On a real fleet the hook
+  would page / trigger hot-spare swap; here it records and (optionally)
+  invokes a callback.
+- **failure injection**: ``fail_at={step: exc}`` for tests.
+- **elastic restart**: ``Supervisor.resume(new_mesh)`` re-device_puts the
+  restored state with the new mesh's shardings (CheckpointManager is
+  mesh-agnostic), so a job can continue on fewer/more chips.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+
+
+@dataclass
+class StragglerWatchdog:
+    z: float = 4.0
+    alpha: float = 0.1
+    warmup: int = 5
+    ewma: float = 0.0
+    dev: float = 0.0
+    seen: int = 0
+    flagged: list = field(default_factory=list)
+    on_straggler: Optional[Callable[[int, float], None]] = None
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.seen += 1
+        if self.seen <= self.warmup:
+            self.ewma = dt if self.seen == 1 else (
+                self.alpha * dt + (1 - self.alpha) * self.ewma)
+            self.dev = max(self.dev, abs(dt - self.ewma))
+            return False
+        slow = dt > self.ewma + self.z * max(self.dev, 1e-9)
+        if slow:
+            self.flagged.append((step, dt))
+            if self.on_straggler:
+                self.on_straggler(step, dt)
+        else:
+            self.ewma = self.alpha * dt + (1 - self.alpha) * self.ewma
+            self.dev = self.alpha * abs(dt - self.ewma) \
+                + (1 - self.alpha) * self.dev
+        return slow
+
+
+class Supervisor:
+    def __init__(self, *, ckpt_dir: str, checkpoint_every: int = 100,
+                 keep: int = 3, max_restarts: int = 3,
+                 watchdog: Optional[StragglerWatchdog] = None):
+        self.mgr = CheckpointManager(ckpt_dir, keep=keep)
+        self.checkpoint_every = checkpoint_every
+        self.max_restarts = max_restarts
+        self.watchdog = watchdog or StragglerWatchdog()
+        self.restarts = 0
+        self.history: list = []
+
+    # ------------------------------------------------------------------
+    def run(self, state: Dict[str, Any], step_fn: Callable,
+            batch_at: Callable[[int], Any], *, start_step: int, steps: int,
+            fail_at: Optional[Dict[int, Exception]] = None,
+            state_shardings=None, on_metrics=None) -> Dict[str, Any]:
+        """Run the loop [start_step, steps) with recovery.
+
+        ``state``: {"params":..., "opt":...}; ``step_fn(params, opt, batch,
+        step) -> (params, opt, metrics)``. ``batch_at(step)`` must be
+        deterministic in ``step`` (replay safety).
+        """
+        fail_at = dict(fail_at or {})
+        step = start_step
+        while step < steps:
+            try:
+                t0 = time.perf_counter()
+                if step in fail_at:
+                    raise fail_at.pop(step)
+                batch = batch_at(step)
+                params, opt, metrics = step_fn(state["params"], state["opt"],
+                                               batch, step)
+                jax.block_until_ready(metrics["total"])
+                state = {"params": params, "opt": opt}
+                dt = time.perf_counter() - t0
+                self.watchdog.observe(step, dt)
+                self.history.append((step, float(metrics["total"]), dt))
+                if on_metrics:
+                    on_metrics(step, metrics)
+                step += 1
+                if step % self.checkpoint_every == 0:
+                    self.mgr.save(step, state)
+            except KeyboardInterrupt:
+                raise
+            except Exception as e:  # noqa: BLE001 — recover from any step fault
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded {self.max_restarts} restarts") from e
+                restored = self.mgr.restore_latest(state,
+                                                   shardings=state_shardings)
+                if restored is None:
+                    # no checkpoint yet: restart from the initial state
+                    step = start_step
+                    continue
+                state, meta = restored
+                step = meta["step"]
+        self.mgr.save(steps, state, block=True)
+        self.mgr.wait()
+        return state
+
+    # ------------------------------------------------------------------
+    def resume(self, template: Dict[str, Any], shardings=None):
+        """Elastic restart: restore the latest checkpoint into a (possibly
+        different) mesh via target shardings."""
+        return self.mgr.restore_latest(template, shardings=shardings)

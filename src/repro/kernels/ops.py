@@ -1,0 +1,48 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True`` — the
+kernel body runs step-by-step in Python against the same BlockSpec tiling, so
+correctness (incl. the grid/accumulator logic) is what's validated; on TPU the
+same calls compile to Mosaic. ``backend()`` picks automatically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.ligo_expand import ligo_blend_expand as _blend_expand
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ligo_blend_expand(w, B, W, **kw):
+    """P[l2] = B @ (Σ_l w[l2,l] W[l]) — fused depth-blend + left expansion."""
+    return _blend_expand(w, B, W, interpret=_interpret(), **kw)
+
+
+def ligo_grow(w, B, A, W, **kw):
+    """Full fused growth Ω[l2] = B (Σ_l w[l2,l] W_l) Aᵀ.
+
+    The left expansion + blend runs in the Pallas kernel; the right expansion
+    is a plain (already-optimal) matmul on the kernel's output.
+    """
+    P = ligo_blend_expand(w, B, W, **kw)
+    return jnp.einsum("kib,jb->kij", P, A)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, **kw):
+    """(B, H, T, dh) × (B, KV, S, dh)² → (B, H, T, dh)."""
+    return _flash(q, k, v, causal=causal, window=window,
+                  interpret=_interpret(), **kw)
+
+
+# re-exported oracles (benchmarks compare against these)
+ligo_blend_expand_ref = ref.ligo_blend_expand_ref
+ligo_grow_ref = ref.ligo_expand_full_ref
+flash_attention_ref = ref.flash_attention_ref

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ligo_blend_expand_ref(w: jax.Array, B: jax.Array, W: jax.Array
+                          ) -> jax.Array:
+    """P[l2] = B @ (Σ_l w[l2,l] · W[l]).
+
+    w: (L2, L1); B: (D2o, D1o); W: (L1, D1o, D1i) → (L2, D2o, D1i).
+    (Depth-blend commutes with width-expansion — both are linear and the width
+    operator is layer-independent — so blending in the *small* space first is
+    both the reference semantics and the kernel's fusion opportunity.)
+    """
+    blended = jnp.einsum("kl,lab->kab", w, W)
+    return jnp.einsum("ia,kab->kib", B, blended)
+
+
+def ligo_expand_full_ref(w, B, A, W):
+    """Full fused growth Ω[l2] = B (Σ_l w[l2,l] W_l) Aᵀ — oracle for ops."""
+    P = ligo_blend_expand_ref(w, B, W)
+    return jnp.einsum("kib,jb->kij", P, A)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0
+                        ) -> jax.Array:
+    """Naive full-matrix attention, fp32 softmax.
+
+    q: (B, H, T, dh); k, v: (B, KV, S, dh), H % KV == 0. Returns (B, H, T, dh).
+    """
+    Bb, H, T, dh = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    G = H // KV
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / jnp.sqrt(dh).astype(jnp.float32)
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= qpos + (S - T) >= kpos       # align last q with last k
+    if window:
+        mask &= kpos > qpos + (S - T) - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", p, vv).astype(q.dtype)

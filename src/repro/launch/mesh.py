@@ -1,0 +1,37 @@
+"""Production mesh construction (TPU v5e pods; CPU host devices in dry-run).
+
+A pod is a 16×16 slice (256 chips); the multi-pod mesh prepends a ``pod`` axis
+(2 pods = 512 chips). Importing this module never touches jax device state —
+meshes are built lazily by the functions.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+# TPU v5e hardware constants (per chip) — used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(n: Optional[int] = None, axis: str = "data"):
+    """A small single-axis mesh over available (host) devices — tests/demos."""
+    devs = jax.devices()
+    n = n or len(devs)
+    return jax.sharding.Mesh(np.array(devs[:n]), (axis,))

@@ -1,0 +1,163 @@
+"""End-to-end training driver: (optionally) grow from a pretrained smaller
+model with LiGO, then train under the production sharding rules with
+fault-tolerant supervision.
+
+    # CPU demo (smoke-size arch, host devices):
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \\
+        --grow-from half --method ligo --steps 200
+
+    # production (TPU pod): same entrypoint with --mesh single|multi.
+
+The grow phase runs *under the same mesh* as training: Θ_small is restored
+(or pretrained in-line for the demo), the LiGO operator is trained with pjit
+for --ligo-steps, and the materialised Θ_large seeds the main loop.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import (TrainConfig, get_config, half_config, smoke_config)
+from repro.core import grow
+from repro.data import GlobalBatchLoader
+from repro.distributed.sharding import (batch_specs, named_shardings,
+                                        params_pspecs)
+from repro.distributed.supervisor import Supervisor
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.model import init_params
+from repro.optim import adamw_init
+from repro.training import make_train_step
+
+
+def build_mesh(kind: str):
+    if kind == "host":
+        return make_host_mesh()
+    return make_production_mesh(multi_pod=(kind == "multi"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--grow-from", default=None,
+                    help="'half' or an arch name: grow instead of cold start")
+    ap.add_argument("--method", default="ligo",
+                    choices=["ligo", "stackbert", "interpolation", "net2net",
+                             "bert2bert", "random"])
+    ap.add_argument("--ligo-steps", type=int, default=100)
+    ap.add_argument("--pretrain-steps", type=int, default=100,
+                    help="demo-only: steps to pretrain the small source")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mesh", default="host", choices=["host", "single",
+                                                       "multi"])
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="sequence-parallel residual stream (see §Perf)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    if cfg.objective != "clm":
+        raise SystemExit("train driver demo supports CLM archs; "
+                         "MLM/vision run through benchmarks + tests")
+
+    mesh = build_mesh(args.mesh)
+    print(f"[train] arch={cfg.name} mesh={dict(mesh.shape)} "
+          f"params={cfg.param_count()/1e6:.1f}M")
+    tcfg = TrainConfig(steps=args.steps, warmup_steps=max(args.steps // 20, 5),
+                       lr=args.lr, seq_len=args.seq, global_batch=args.batch,
+                       checkpoint_every=args.checkpoint_every)
+
+    model_sz = mesh.shape.get("model", 1)
+    dp_sz = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    act_spec = P("data", "model", None) if args.seq_shard else None
+
+    with jax.set_mesh(mesh):
+        # ---- source model ------------------------------------------------
+        if args.grow_from:
+            small_cfg = (half_config(cfg) if args.grow_from == "half"
+                         else smoke_config(get_config(args.grow_from))
+                         if args.smoke else get_config(args.grow_from))
+            print(f"[train] pretraining source {small_cfg.name} "
+                  f"({small_cfg.param_count()/1e6:.1f}M) for "
+                  f"{args.pretrain_steps} steps")
+            sp = init_params(small_cfg, jax.random.PRNGKey(args.seed))
+            s_opt = adamw_init(sp)
+            s_step = jax.jit(make_train_step(small_cfg, tcfg))
+            s_loader = GlobalBatchLoader(small_cfg, mesh, args.batch,
+                                         args.seq, seed=args.seed)
+            for i in range(args.pretrain_steps):
+                sp, s_opt, m = s_step(sp, s_opt, s_loader.batch_at(i),
+                                      jnp.asarray(i))
+            print(f"[train] source loss {float(m['total']):.4f}")
+            g_loader = GlobalBatchLoader(small_cfg, mesh, args.batch,
+                                         args.seq, seed=args.seed + 1)
+            params, info = grow(
+                sp, small_cfg, cfg, method=args.method,
+                key=jax.random.PRNGKey(args.seed + 2),
+                data_it=iter(g_loader), ligo_steps=args.ligo_steps)
+            if "ligo_losses" in info:
+                ll = info["ligo_losses"]
+                print(f"[train] LiGO phase: {ll[0]:.4f} -> {ll[-1]:.4f} "
+                      f"({len(ll)} steps)")
+        else:
+            params = init_params(cfg, jax.random.PRNGKey(args.seed))
+
+        # ---- sharded training loop ---------------------------------------
+        pspecs = params_pspecs(params, model_size=model_sz, dp_size=dp_sz)
+        psh = named_shardings(pspecs, mesh)
+        params = jax.tree.map(jax.device_put, params, psh)
+        opt = adamw_init(params)
+        step_fn = make_train_step(cfg, tcfg, act_spec=act_spec)
+        loader = GlobalBatchLoader(cfg, mesh, args.batch, args.seq,
+                                   seed=args.seed + 10)
+        b0 = loader.batch_at(0)
+        bsh = named_shardings(batch_specs(b0, dp_size=dp_sz), mesh)
+        osh = type(opt)(m=psh, v=psh, count=NamedSharding(mesh, P()))
+        jstep = jax.jit(step_fn, in_shardings=(psh, osh, bsh,
+                                               NamedSharding(mesh, P())),
+                        out_shardings=(psh, osh, None))
+
+        sup = Supervisor(ckpt_dir=args.ckpt_dir,
+                         checkpoint_every=args.checkpoint_every)
+        restored = sup.resume({"params": params, "opt": opt},
+                              shardings={"params": psh, "opt": osh})
+        start = 0
+        if restored is not None:
+            state, meta = restored
+            params, opt = state["params"], state["opt"]
+            start = meta["step"]
+            print(f"[train] resumed from step {start}")
+
+        def on_metrics(step, m):
+            if step % 20 == 0:
+                print(f"[train] step {step:5d} loss {float(m['total']):.4f} "
+                      f"lr {float(m['lr']):.2e} gnorm "
+                      f"{float(m['grad_norm']):.2f}", flush=True)
+
+        state = sup.run({"params": params, "opt": opt},
+                        lambda p, o, b, s: jstep(p, o, b, jnp.asarray(s)),
+                        loader.batch_at, start_step=start, steps=args.steps,
+                        state_shardings={"params": psh, "opt": osh},
+                        on_metrics=on_metrics)
+        final = sup.history[-1][1] if sup.history else float("nan")
+        print(f"[train] done: steps={args.steps} final_loss={final:.4f} "
+              f"stragglers={len(sup.watchdog.flagged)} "
+              f"restarts={sup.restarts}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.models.model import (decode_step, forward, init_decode_state,
+                                init_params, prefill, unembed)
+from repro.models.losses import loss_fn
+from repro.models import inputs
+
+__all__ = ["init_params", "forward", "decode_step", "prefill", "unembed",
+           "init_decode_state", "loss_fn", "inputs"]

@@ -1,0 +1,118 @@
+"""Input specifications per (architecture × shape): ShapeDtypeStructs for the
+dry-run and concrete dummy batches for smoke tests.
+
+Modality frontends are stubs per the assignment: audio archs receive
+precomputed frame embeddings, VLM archs precomputed patch embeddings (+ 3-axis
+M-RoPE position ids), vision archs precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import DTYPES, init_decode_state
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    dt = DTYPES[cfg.dtype]
+    i32 = jnp.int32
+    if cfg.modality == "audio":
+        return {"frames": SDS((batch, seq, cfg.d_model), dt),
+                "mask": SDS((batch, seq), jnp.bool_),
+                "labels": SDS((batch, seq), i32)}
+    if cfg.modality == "vision":
+        return {"patches": SDS((batch, cfg.num_patches - 1, cfg.d_model), dt),
+                "labels": SDS((batch,), i32)}
+    if cfg.objective == "mlm":
+        return {"tokens": SDS((batch, seq), i32),
+                "mask": SDS((batch, seq), jnp.bool_),
+                "labels": SDS((batch, seq), i32)}
+    spec = {"tokens": SDS((batch, seq), i32), "targets": SDS((batch, seq), i32)}
+    if cfg.modality == "vlm":
+        spec["patch_embeds"] = SDS((batch, min(cfg.num_patches, seq), cfg.d_model), dt)
+        spec["positions"] = SDS((batch, seq, 3), i32)
+    return spec
+
+
+def prefill_batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    spec = train_batch_specs(cfg, batch, seq)
+    spec.pop("targets", None)
+    spec.pop("labels", None)
+    return spec
+
+
+def decode_batch_specs(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    spec = {"tokens": SDS((batch, 1), jnp.int32)}
+    if cfg.modality == "vlm":
+        spec["positions"] = SDS((batch, 1, 3), jnp.int32)
+    return spec
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, seq: int):
+    return jax.eval_shape(lambda: init_decode_state(cfg, batch, seq))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape.global_batch,
+                                           shape.seq_len)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape.global_batch,
+                                             shape.seq_len)}
+    if shape.kind == "decode":
+        return {"batch": decode_batch_specs(cfg, shape.global_batch),
+                "state": decode_state_specs(cfg, shape.global_batch,
+                                            shape.seq_len)}
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# Concrete dummy batches (smoke tests / examples)
+# ---------------------------------------------------------------------------
+def dummy_batch(cfg: ModelConfig, batch: int, seq: int, kind: str,
+                seed: int = 0) -> Dict[str, Any]:
+    rng = np.random.RandomState(seed)
+    dt = DTYPES[cfg.dtype]
+
+    def toks(shape):
+        return jnp.asarray(rng.randint(0, cfg.vocab_size, shape), jnp.int32)
+
+    if kind == "decode":
+        b = {"tokens": toks((batch, 1))}
+        if cfg.modality == "vlm":
+            b["positions"] = jnp.zeros((batch, 1, 3), jnp.int32)
+        return b
+    if cfg.modality == "audio":
+        b = {"frames": jnp.asarray(rng.randn(batch, seq, cfg.d_model), dt),
+             "mask": jnp.asarray(rng.rand(batch, seq) < 0.15),
+             "labels": toks((batch, seq))}
+    elif cfg.modality == "vision":
+        b = {"patches": jnp.asarray(
+                 rng.randn(batch, cfg.num_patches - 1, cfg.d_model), dt),
+             "labels": toks((batch,))}
+    elif cfg.objective == "mlm":
+        b = {"tokens": toks((batch, seq)),
+             "mask": jnp.asarray(rng.rand(batch, seq) < 0.15),
+             "labels": toks((batch, seq))}
+    else:
+        t = toks((batch, seq + 1))
+        b = {"tokens": t[:, :-1], "targets": t[:, 1:]}
+        if cfg.modality == "vlm":
+            P_ = min(cfg.num_patches, seq)
+            b["patch_embeds"] = jnp.asarray(rng.randn(batch, P_, cfg.d_model),
+                                            dt)
+            pos = np.broadcast_to(np.arange(seq)[None, :, None],
+                                  (batch, seq, 3)).copy()
+            b["positions"] = jnp.asarray(pos, jnp.int32)
+    if kind == "prefill":
+        b.pop("targets", None)
+        if cfg.modality != "audio":
+            b.pop("labels", None)
+    return b

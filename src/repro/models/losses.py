@@ -1,0 +1,117 @@
+"""Objectives: causal LM, masked LM, classification.
+
+The LM losses compute logits in sequence chunks (never materialising the full
+``[B, T, V]`` tensor) — at vocab 128k–200k and T 4k this is the difference
+between ~1 GB and ~8 GB of live logits per device. Softmax/CE is fp32.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import P, maybe_shard
+from repro.models.model import forward, unembed
+
+
+@jax.custom_vjp
+def grad_cast_bf16(x: jax.Array) -> jax.Array:
+    """Identity whose cotangent is cast to bf16.
+
+    The CE loss computes in fp32, so without this gate the *entire backbone
+    backward* runs fp32 cotangents — every TP all-reduce of (B,T,D) activation
+    gradients moves 2× the bytes it needs to (observed directly in the
+    dry-run HLO; see EXPERIMENTS.md §Perf). Placing the gate between the
+    final norm and the unembed keeps the loss math fp32 while the backbone
+    backward runs bf16.
+    """
+    return x
+
+
+def _gc_fwd(x):
+    return x, None
+
+
+def _gc_bwd(_, g):
+    return (g.astype(jnp.bfloat16),)
+
+
+grad_cast_bf16.defvjp(_gc_fwd, _gc_bwd)
+
+
+def _ce_fp32(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-position cross entropy; logits (..., V) any dtype, labels (...) int."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return lse - gold
+
+
+def chunked_lm_loss(params, cfg: ModelConfig, hidden: jax.Array,
+                    labels: jax.Array, weights: jax.Array, *,
+                    loss_chunk: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Σ w·CE over (B,T); returns (sum_loss, sum_weight).
+
+    loss_chunk=0 disables chunking (single unembed matmul).
+    """
+    B, T, D = hidden.shape
+    if not loss_chunk or loss_chunk >= T:
+        logits = unembed(params, cfg, hidden)
+        logits = maybe_shard(logits, P("data", None, "model"))
+        ce = _ce_fp32(logits, labels)
+        return jnp.sum(ce * weights), jnp.sum(weights)
+
+    C = loss_chunk
+    assert T % C == 0, (T, C)
+    hs = hidden.reshape(B, T // C, C, D)
+    ls = labels.reshape(B, T // C, C)
+    ws = weights.reshape(B, T // C, C)
+
+    def chunk(carry, inp):
+        h, l, w = inp
+        logits = unembed(params, cfg, h)
+        logits = maybe_shard(logits, P("data", None, "model"))
+        ce = _ce_fp32(logits, l)
+        return (carry[0] + jnp.sum(ce * w), carry[1] + jnp.sum(w)), None
+
+    (s, n), _ = jax.lax.scan(
+        chunk, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (jnp.moveaxis(hs, 1, 0), jnp.moveaxis(ls, 1, 0),
+         jnp.moveaxis(ws, 1, 0)))
+    return s, n
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            remat: bool = False, loss_chunk: int = 0, aux_weight: float = 0.01,
+            chunk_q: int = 2048, chunk_k: int = 2048, act_spec=None,
+            bf16_cotangent: bool = False, p_bf16: bool = False,
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Scalar training loss + metrics for any architecture/objective."""
+    hidden, _, aux = forward(params, cfg, batch, mode="train", remat=remat,
+                             chunk_q=chunk_q, chunk_k=chunk_k,
+                             act_spec=act_spec, p_bf16=p_bf16)
+    if bf16_cotangent and hidden.dtype == jnp.bfloat16:
+        hidden = grad_cast_bf16(hidden)
+    if cfg.objective == "clm":
+        # predict token t+1 from position t
+        labels = batch["targets"]
+        weights = batch.get("weights", jnp.ones_like(labels, jnp.float32))
+        s, n = chunked_lm_loss(params, cfg, hidden, labels,
+                               weights.astype(jnp.float32),
+                               loss_chunk=loss_chunk)
+        loss = s / jnp.maximum(n, 1.0)
+    elif cfg.objective == "mlm":
+        labels = batch["labels"]
+        weights = batch["mask"].astype(jnp.float32)
+        s, n = chunked_lm_loss(params, cfg, hidden, labels, weights,
+                               loss_chunk=loss_chunk)
+        loss = s / jnp.maximum(n, 1.0)
+    elif cfg.objective == "cls":
+        logits = unembed(params, cfg, hidden[:, 0])      # CLS pooling
+        loss = jnp.mean(_ce_fp32(logits, batch["labels"]))
+    else:
+        raise ValueError(cfg.objective)
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux": aux}

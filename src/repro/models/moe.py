@@ -1,0 +1,116 @@
+"""Mixture-of-Experts layer: token-choice top-k routing with capacity buffers.
+
+Dispatch uses the scatter/gather (sort-free) formulation: tokens are placed into
+per-expert capacity buffers ``(E, C, D)`` by their position-in-expert (cumsum of
+the routing one-hot), experts run as a single batched einsum (MXU-friendly),
+and results are gathered back and combined with the routing weights. Capacity
+``C = ceil(topk · N · cf / E)``; overflowing tokens are dropped (standard
+GShard/Switch semantics; the residual stream carries them unchanged).
+
+Under pjit, expert buffers are sharded over the ``model`` axis when the expert
+count divides it (EP); otherwise the per-expert hidden dim is TP-sharded.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import maybe_shard, P
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], D, E, dtype=jnp.float32),  # router in fp32
+        "w1": jax.vmap(lambda k: dense_init(k, D, F, dtype=dtype))(
+            jax.random.split(ks[1], E)),
+        "w2": jax.vmap(lambda k: dense_init(
+            k, F, D, 1.0 / math.sqrt(2 * cfg.n_layers), dtype=dtype))(
+            jax.random.split(ks[2], E)),
+    }
+    if cfg.act == "swiglu":
+        p["w3"] = jax.vmap(lambda k: dense_init(k, D, F, dtype=dtype))(
+            jax.random.split(ks[3], E))
+    return p
+
+
+def _expert_shard_spec(cfg):
+    """Expert-buffer (E, C, D) layout.
+
+    - "model": EP over E only (baseline — capacity dim replicated over data,
+      i.e. every data shard computes every expert's full buffer);
+    - "model_data": EP over E + capacity over data (the dispatch scatter
+      becomes the MoE all-to-all; per-device expert FLOPs drop by the dp
+      degree). Falls back to sharding C when E doesn't divide the model axis.
+    """
+    E = cfg.n_experts
+    if cfg.moe_dispatch_shard == "model_data":
+        if E % 16 == 0:
+            return P("model", "data", None)
+        return P(None, ("data", "model"), None)
+    return (P("model", None, None) if E % 16 == 0
+            else P(None, None, "model"))
+
+
+def apply_moe(p, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, D). Returns (out (B, T, D), aux_loss scalar)."""
+    B, T, D = x.shape
+    E, k = cfg.n_experts, cfg.experts_top_k
+    N = B * T
+    C = int(math.ceil(k * N * cfg.capacity_factor / E))
+    xf = x.reshape(N, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])            # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                     # (N, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)     # renormalise (Mixtral)
+
+    # load-balancing auxiliary loss (Switch): E · Σ_e fraction_e · prob_e
+    frac = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=0))
+
+    e_flat = top_e.reshape(-1)                                 # (N·k,)
+    w_flat = top_w.reshape(-1)
+    oh = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)            # (N·k, E)
+    pos = (jnp.cumsum(oh, axis=0) - oh)                        # position-in-expert
+    pos_flat = jnp.sum(pos * oh, axis=-1)                      # (N·k,)
+    keep = pos_flat < C
+    pos_c = jnp.minimum(pos_flat, C - 1)
+
+    x_rep = jnp.repeat(xf, k, axis=0) * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((E, C, D), x.dtype).at[e_flat, pos_c].add(x_rep)
+    buf = maybe_shard(buf, _expert_shard_spec(cfg))
+
+    w1, w2, w3 = p["w1"], p["w2"], p.get("w3")
+    if cfg.moe_weight_gather:
+        # FSDP storage, TP compute: re-shard this layer's (FSDP-sharded)
+        # expert weights to a contraction-free TP layout before the einsums,
+        # so GSPMD emits cheap per-layer weight all-gathers instead of
+        # partial-sum all-reduces of the (E, C, ·) buffers (§Perf).
+        # Layer slices are (E, in, out).
+        if E % 16 == 0:
+            up_spec = dn_spec = P("model", None, None)        # EP
+        else:
+            up_spec = P(None, None, "model")                  # TP on hidden
+            dn_spec = P(None, "model", None)
+        w1 = maybe_shard(w1, up_spec)
+        w2 = maybe_shard(w2, dn_spec)
+        w3 = maybe_shard(w3, up_spec) if w3 is not None else None
+
+    h = jnp.einsum("ecd,edf->ecf", buf, w1)
+    if w3 is not None:
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, w3)
+    else:
+        h = jax.nn.gelu(h)
+    y = jnp.einsum("ecf,efd->ecd", h, w2)
+    y = maybe_shard(y, _expert_shard_spec(cfg))
+
+    gathered = y[e_flat, pos_c]                                # (N·k, D)
+    gathered = gathered * (w_flat * keep).astype(x.dtype)[:, None]
+    out = jnp.sum(gathered.reshape(N, k, D), axis=1)
+    return out.reshape(B, T, D), aux

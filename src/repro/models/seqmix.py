@@ -1,0 +1,221 @@
+"""Sequence-mixing engines for SSM-family blocks.
+
+One chunkwise-parallel **gated linear attention** (GLA) engine serves both
+xLSTM's mLSTM (matrix memory) and Mamba2's SSD — they are the same recurrence
+
+    S_t = f_t · S_{t-1} + i_t · k_t v_tᵀ        (state:   H × dk × dv)
+    n_t = f_t · n_{t-1} + i_t · k_t             (normaliser, mLSTM only)
+    h_t = q_tᵀ S_t   [/ max(|q_t·n_t|, 1)]
+
+with per-(token, head) scalar gates ``f_t = exp(log_f)``, ``i_t = exp(log_i)``,
+``log_f, log_i ≤ 0`` (sigmoid / decay parameterisations), which keeps every
+exponential ≤ 1 and removes the need for a running max stabiliser in the
+chunked form (DESIGN.md §8). The chunked algorithm is the standard
+within-chunk-quadratic / across-chunk-recurrent decomposition (SSD): wall-clock
+O(T·C·d + T·d·N) instead of a length-T sequential scan.
+
+sLSTM (scalar memory) is inherently sequential and uses a fused lax.scan with
+the exponential-gate max-stabiliser of the xLSTM paper.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GLAState(NamedTuple):
+    S: jax.Array       # (B, H, dk, dv)
+    n: jax.Array       # (B, H, dk)
+
+
+def gla_init_state(batch: int, heads: int, dk: int, dv: int,
+                   dtype=jnp.float32) -> GLAState:
+    return GLAState(jnp.zeros((batch, heads, dk, dv), dtype),
+                    jnp.zeros((batch, heads, dk), dtype))
+
+
+def gla_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                log_f: jax.Array, log_i: jax.Array,
+                state: Optional[GLAState] = None, *,
+                chunk: int = 128, normalize: bool = False,
+                ) -> Tuple[jax.Array, GLAState]:
+    """Chunkwise-parallel gated linear attention.
+
+    q, k: (B, T, H, dk); v: (B, T, H, dv); log_f, log_i: (B, T, H), both ≤ 0.
+    Returns (out (B, T, H, dv), final GLAState). All math in float32.
+    """
+    B, T, H, dk = q.shape
+    dv = v.shape[-1]
+    C = min(chunk, T)
+    pad = (-T) % C
+    if pad:
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))  # f=1 ⇒ state frozen
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)               # i=0 ⇒ no injection
+    NC = (T + pad) // C
+
+    f32 = jnp.float32
+    qc = q.reshape(B, NC, C, H, dk).astype(f32)
+    kc = k.reshape(B, NC, C, H, dk).astype(f32)
+    vc = v.reshape(B, NC, C, H, dv).astype(f32)
+    lf = log_f.reshape(B, NC, C, H).astype(f32)
+    li = log_i.reshape(B, NC, C, H).astype(f32)
+
+    if state is None:
+        state = gla_init_state(B, H, dk, dv)
+
+    def chunk_step(carry, inp):
+        S, n = carry                                  # (B,H,dk,dv), (B,H,dk)
+        qb, kb, vb, lfb, lib = inp                    # (B,C,H,·)
+        Lf = jnp.cumsum(lfb, axis=1)                  # inclusive cumulative decay
+        Lf_tot = Lf[:, -1]                            # (B,H)
+        # --- state contribution: exp(Lf_t) q_t · S_in
+        q_dec = qb * jnp.exp(Lf)[..., None]
+        h_state = jnp.einsum("bchk,bhkv->bchv", q_dec, S)
+        n_state = jnp.einsum("bchk,bhk->bch", q_dec, n)
+        # --- intra-chunk: D[t,s] = exp(Lf_t - Lf_s + li_s) for s ≤ t
+        diff = Lf[:, :, None] - Lf[:, None, :] + lib[:, None, :]   # (B,Ct,Cs,H)
+        tri = jnp.tril(jnp.ones((C, C), bool))
+        Dm = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        A = jnp.einsum("bthk,bshk->btsh", qb, kb) * Dm             # (B,Ct,Cs,H)
+        h_intra = jnp.einsum("btsh,bshv->bthv", A, vb)
+        # normaliser intra: Σ_s D[t,s] (q_t·k_s) — reuse A summed over s
+        n_inner = jnp.sum(A, axis=2)                               # (B,Ct,H)
+        # --- state update: S' = exp(Lf_tot) S + Σ_s exp(Lf_tot - Lf_s + li_s) k_s v_sᵀ
+        w = jnp.exp(Lf_tot[:, None] - Lf + lib)                    # (B,C,H)
+        k_w = kb * w[..., None]
+        S_new = S * jnp.exp(Lf_tot)[..., None, None] + jnp.einsum(
+            "bchk,bchv->bhkv", k_w, vb)
+        n_new = n * jnp.exp(Lf_tot)[..., None] + jnp.sum(k_w, axis=1)
+        h = h_state + h_intra                                      # (B,C,H,dv)
+        norm = n_state + n_inner                                   # (B,C,H)
+        return (S_new, n_new), (h, norm)
+
+    (S_f, n_f), (h, norm) = jax.lax.scan(
+        chunk_step, (state.S.astype(f32), state.n.astype(f32)),
+        (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+         jnp.moveaxis(lf, 1, 0), jnp.moveaxis(li, 1, 0)))
+    h = jnp.moveaxis(h, 0, 1).reshape(B, NC * C, H, dv)[:, :T]
+    if normalize:
+        norm = jnp.moveaxis(norm, 0, 1).reshape(B, NC * C, H)[:, :T]
+        h = h / jnp.maximum(jnp.abs(norm), 1.0)[..., None]
+    return h.astype(v.dtype), GLAState(S_f, n_f)
+
+
+def gla_step(q: jax.Array, k: jax.Array, v: jax.Array,
+             log_f: jax.Array, log_i: jax.Array, state: GLAState, *,
+             normalize: bool = False) -> Tuple[jax.Array, GLAState]:
+    """Single-token recurrent GLA step (decode path).
+
+    q, k: (B, H, dk); v: (B, H, dv); log_f, log_i: (B, H).
+    """
+    f32 = jnp.float32
+    f = jnp.exp(log_f.astype(f32))[..., None]
+    i = jnp.exp(log_i.astype(f32))[..., None]
+    kf, vf, qf = k.astype(f32), v.astype(f32), q.astype(f32)
+    S = state.S * f[..., None] + i[..., None] * kf[..., None] * vf[..., None, :]
+    n = state.n * f + i * kf
+    h = jnp.einsum("bhk,bhkv->bhv", qf, S)
+    if normalize:
+        norm = jnp.einsum("bhk,bhk->bh", qf, n)
+        h = h / jnp.maximum(jnp.abs(norm), 1.0)[..., None]
+    return h.astype(v.dtype), GLAState(S, n)
+
+
+# ---------------------------------------------------------------------------
+# Reference (naive recurrent) GLA — oracle for tests
+# ---------------------------------------------------------------------------
+def gla_recurrent_ref(q, k, v, log_f, log_i, state=None, normalize=False):
+    B, T, H, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = gla_init_state(B, H, dk, dv)
+
+    def step(carry, t_in):
+        qt, kt, vt, lft, lit = t_in
+        h, new = gla_step(qt, kt, vt, lft, lit, carry, normalize=normalize)
+        return new, h
+
+    xs = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+          jnp.moveaxis(log_f, 1, 0), jnp.moveaxis(log_i, 1, 0))
+    final, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1), final
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (Mamba2 / mLSTM front conv)
+# ---------------------------------------------------------------------------
+def causal_conv(x: jax.Array, w: jax.Array,
+                conv_state: Optional[jax.Array] = None):
+    """x: (B, T, C); w: (K, C) depthwise kernel. Returns (y, new_conv_state).
+
+    ``conv_state``: (B, K-1, C) trailing context for decode; pass None in
+    training/prefill (zero history).
+    """
+    B, T, C = x.shape
+    K = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, K - 1, C), x.dtype)
+    xx = jnp.concatenate([conv_state, x], axis=1)        # (B, T+K-1, C)
+    y = jnp.zeros_like(x)
+    for j in range(K):
+        y = y + jax.lax.slice_in_dim(xx, j, j + T, axis=1) * w[j]
+    new_state = jax.lax.slice_in_dim(xx, T, T + K - 1, axis=1)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, sequential scan, exp gates with max-stabiliser)
+# ---------------------------------------------------------------------------
+class SLSTMState(NamedTuple):
+    h: jax.Array   # (B, D)
+    c: jax.Array
+    n: jax.Array
+    m: jax.Array
+
+
+def slstm_init_state(batch: int, dim: int, dtype=jnp.float32) -> SLSTMState:
+    z = jnp.zeros((batch, dim), dtype)
+    return SLSTMState(z, z, z, jnp.full((batch, dim), -1e30, dtype))
+
+
+def slstm_cell(x_gates: jax.Array, p, state: SLSTMState
+               ) -> Tuple[jax.Array, SLSTMState]:
+    """One sLSTM step. x_gates: (B, 4D) = input contributions [z, i, f, o]."""
+    f32 = jnp.float32
+    h, c, n, m = (s.astype(f32) for s in state)
+    D = h.shape[-1]
+    r = h @ p["r"].astype(f32) + p["b"].astype(f32)      # (B, 4D) recurrent part
+    g = x_gates.astype(f32) + r
+    zt, it, ft, ot = jnp.split(g, 4, axis=-1)
+    z = jnp.tanh(zt)
+    o = jax.nn.sigmoid(ot)
+    m_new = jnp.maximum(ft + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + m - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    st = SLSTMState(h_new, c_new, n_new, m_new)
+    return h_new.astype(x_gates.dtype), st
+
+
+def slstm_seq(x: jax.Array, p, state: Optional[SLSTMState] = None):
+    """x: (B, T, D). Returns (out (B, T, D), final state)."""
+    B, T, D = x.shape
+    if state is None:
+        state = slstm_init_state(B, D)
+    x_gates = x @ p["w"]                                  # (B, T, 4D)
+    if "wb" in p:
+        x_gates = x_gates + p["wb"]
+
+    def step(carry, xg):
+        h, st = slstm_cell(xg, p, carry)
+        return st, h
+
+    final, hs = jax.lax.scan(step, state, jnp.moveaxis(x_gates, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), final

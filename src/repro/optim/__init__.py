@@ -1,0 +1,9 @@
+from repro.optim.adamw import (AdamWState, SGDState, adamw_init, adamw_update,
+                               clip_by_global_norm, global_norm, sgd_init,
+                               sgd_update)
+from repro.optim.schedules import SCHEDULES, constant, warmup_cosine, warmup_linear
+from repro.optim import compression
+
+__all__ = ["AdamWState", "SGDState", "adamw_init", "adamw_update", "sgd_init",
+           "sgd_update", "clip_by_global_norm", "global_norm", "SCHEDULES",
+           "warmup_cosine", "warmup_linear", "constant", "compression"]

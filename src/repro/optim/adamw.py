@@ -1,0 +1,98 @@
+"""AdamW and SGD-momentum, from scratch (no optax in this environment).
+
+Optimizer state (m, v) is kept in fp32 regardless of parameter dtype — the
+standard TPU recipe when training with bf16 params (DESIGN.md §5). The state
+pytree mirrors the parameter pytree, so parameter PartitionSpecs apply
+verbatim (ZeRO-style sharding falls out of FSDP param sharding for free).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    m: Params
+    v: Params
+    count: jax.Array
+
+
+def _decay_mask(params: Params) -> Params:
+    """No weight decay on vectors/scalars (norm scales, biases, gates)."""
+    return jax.tree.map(lambda p: p.ndim >= 2, params)
+
+
+def adamw_init(params: Params) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    return AdamWState(m=jax.tree.map(f32, params),
+                      v=jax.tree.map(f32, params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads: Params, state: AdamWState, params: Params, *,
+                 lr: jax.Array, b1: float = 0.9, b2: float = 0.999,
+                 eps: float = 1e-8, weight_decay: float = 0.01,
+                 ) -> Tuple[Params, AdamWState]:
+    count = state.count + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+    mask = _decay_mask(params)
+
+    def upd(g, m, v, p, decay):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * gf * gf
+        step = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        if decay:
+            step = step + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m_new, v_new
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    flat_mask = tdef.flatten_up_to(mask)
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p, dk in zip(flat_g, flat_m, flat_v, flat_p, flat_mask):
+        a, b, c = upd(g, m, v, p, dk)
+        new_p.append(a); new_m.append(b); new_v.append(c)
+    return (tdef.unflatten(new_p),
+            AdamWState(tdef.unflatten(new_m), tdef.unflatten(new_v), count))
+
+
+# ---------------------------------------------------------------------------
+class SGDState(NamedTuple):
+    mom: Params
+
+
+def sgd_init(params: Params) -> SGDState:
+    return SGDState(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+
+
+def sgd_update(grads: Params, state: SGDState, params: Params, *,
+               lr: jax.Array, momentum: float = 0.9
+               ) -> Tuple[Params, SGDState]:
+    mom = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                       state.mom, grads)
+    params = jax.tree.map(lambda p, m: (p.astype(jnp.float32) - lr * m
+                                        ).astype(p.dtype), params, mom)
+    return params, SGDState(mom)
+
+
+# ---------------------------------------------------------------------------
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> Tuple[Params, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm

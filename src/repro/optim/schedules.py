@@ -1,0 +1,33 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, base_lr: float, warmup_steps: int, total_steps: int,
+                  end_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps)
+                    / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = base_lr * (end_frac + (1 - end_frac) * 0.5
+                     * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def warmup_linear(step, *, base_lr: float, warmup_steps: int,
+                  total_steps: int, end_frac: float = 0.0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps)
+                    / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    lin = base_lr * (1.0 - (1.0 - end_frac) * prog)
+    return jnp.where(step < warmup_steps, warm, lin)
+
+
+def constant(step, *, base_lr: float, **_):
+    return jnp.full((), base_lr, jnp.float32)
+
+
+SCHEDULES = {"warmup_cosine": warmup_cosine, "warmup_linear": warmup_linear,
+             "constant": constant}

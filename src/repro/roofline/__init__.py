@@ -1,0 +1,3 @@
+from repro.roofline.hlo import collect_hlo_stats
+
+__all__ = ["collect_hlo_stats"]

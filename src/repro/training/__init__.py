@@ -1,0 +1,4 @@
+from repro.training.trainer import (init_train_state, make_eval_step,
+                                    make_train_step)
+
+__all__ = ["make_train_step", "make_eval_step", "init_train_state"]

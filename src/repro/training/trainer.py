@@ -1,0 +1,95 @@
+"""Train/eval step builders — the functions the launcher jits/pjits.
+
+``make_train_step`` closes over (ModelConfig, TrainConfig) and returns a pure
+``(params, opt_state, batch, step) -> (params, opt_state, metrics)``:
+schedule → (optionally microbatched) value_and_grad with remat + chunked loss
+→ global-norm clip → AdamW. Under a mesh the same function is pjit'd with
+FSDP/TP shardings (launch/train.py, launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models.losses import loss_fn
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         warmup_cosine)
+
+Params = Any
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, *,
+                    loss_chunk: int = 0, chunk_q: int = 2048,
+                    chunk_k: int = 2048, act_spec=None,
+                    bf16_cotangent: bool = False,
+                    p_bf16: bool = False) -> Callable:
+    remat = tcfg.remat == "block"
+
+    def compute_loss(params, batch):
+        return loss_fn(params, cfg, batch, remat=remat, loss_chunk=loss_chunk,
+                       chunk_q=chunk_q, chunk_k=chunk_k, act_spec=act_spec,
+                       bf16_cotangent=bf16_cotangent, p_bf16=p_bf16)
+
+    grad_fn = jax.value_and_grad(compute_loss, has_aux=True)
+
+    def grads_of(params, batch):
+        if tcfg.microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        M = tcfg.microbatches
+
+        def reshape(x):
+            b = x.shape[0]
+            assert b % M == 0, (b, M)
+            return x.reshape((M, b // M) + x.shape[1:])
+
+        micro = jax.tree.map(reshape, batch)
+
+        def acc_step(carry, mb):
+            loss_s, metrics_s, grads_s = carry
+            (loss, metrics), grads = grad_fn(params, mb)
+            grads_s = jax.tree.map(jnp.add, grads_s, grads)
+            metrics_s = jax.tree.map(jnp.add, metrics_s, metrics)
+            return (loss_s + loss, metrics_s, grads_s), None
+
+        zero_g = jax.tree.map(jnp.zeros_like, params)
+        zero_m = {"loss": jnp.zeros(()), "aux": jnp.zeros(())}
+        (loss, metrics, grads), _ = jax.lax.scan(
+            acc_step, (jnp.zeros(()), zero_m, zero_g), micro)
+        inv = 1.0 / M
+        return (loss * inv, jax.tree.map(lambda x: x * inv, metrics),
+                jax.tree.map(lambda g: (g.astype(jnp.float32) * inv
+                                        ).astype(g.dtype), grads))
+
+    def train_step(params: Params, opt_state, batch, step: jax.Array):
+        lr = warmup_cosine(step, base_lr=tcfg.lr,
+                           warmup_steps=tcfg.warmup_steps,
+                           total_steps=tcfg.steps, end_frac=tcfg.end_lr_frac)
+        loss, metrics, grads = grads_of(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        params, opt_state = adamw_update(
+            grads, opt_state, params, lr=lr, b1=tcfg.b1, b2=tcfg.b2,
+            weight_decay=tcfg.weight_decay)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr, total=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, *, loss_chunk: int = 0) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, cfg, batch, loss_chunk=loss_chunk)
+        return metrics
+
+    return eval_step
+
+
+def init_train_state(cfg: ModelConfig, key) -> Tuple[Params, Any]:
+    from repro.models.model import init_params
+    params = init_params(cfg, key)
+    return params, adamw_init(params)

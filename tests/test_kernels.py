@@ -1,0 +1,111 @@
+"""Pallas kernel correctness: shape/dtype sweeps against the jnp oracles
+(interpret mode executes the kernel body + BlockSpec tiling on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (flash_attention, flash_attention_ref,
+                           ligo_blend_expand, ligo_blend_expand_ref,
+                           ligo_grow, ligo_grow_ref)
+
+LIGO_SHAPES = [
+    (4, 2, 256, 128, 128),
+    (12, 6, 384, 256, 512),
+    (3, 3, 128, 128, 256),
+    (2, 1, 128, 128, 128),
+]
+
+
+@pytest.mark.parametrize("shape", LIGO_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ligo_blend_expand(shape, dtype):
+    L2, L1, D2o, D1o, D1i = shape
+    rng = np.random.RandomState(0)
+    w = jnp.asarray(rng.randn(L2, L1), jnp.float32)
+    B = jnp.asarray(rng.randn(D2o, D1o) * 0.1, dtype)
+    W = jnp.asarray(rng.randn(L1, D1o, D1i) * 0.1, dtype)
+    got = ligo_blend_expand(w, B, W)
+    ref = ligo_blend_expand_ref(w, B, W)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_ligo_blend_expand_tile_sweep():
+    rng = np.random.RandomState(1)
+    w = jnp.asarray(rng.randn(4, 2), jnp.float32)
+    B = jnp.asarray(rng.randn(256, 256) * 0.1, jnp.float32)
+    W = jnp.asarray(rng.randn(2, 256, 256) * 0.1, jnp.float32)
+    ref = ligo_blend_expand_ref(w, B, W)
+    for ti, ta, tb in [(128, 128, 128), (256, 128, 256), (128, 256, 128)]:
+        got = ligo_blend_expand(w, B, W, ti=ti, ta=ta, tb=tb)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_ligo_grow_full():
+    rng = np.random.RandomState(2)
+    w = jnp.asarray(rng.randn(4, 2), jnp.float32)
+    B = jnp.asarray(rng.randn(256, 128) * 0.1, jnp.float32)
+    A = jnp.asarray(rng.randn(192, 128) * 0.1, jnp.float32)
+    W = jnp.asarray(rng.randn(2, 128, 128) * 0.1, jnp.float32)
+    np.testing.assert_allclose(np.asarray(ligo_grow(w, B, A, W)),
+                               np.asarray(ligo_grow_ref(w, B, A, W)),
+                               rtol=1e-5, atol=1e-5)
+
+
+FLASH_CASES = [
+    # (B, H, KV, T, S, dh, causal, window)
+    (2, 4, 4, 256, 256, 64, True, 0),
+    (1, 8, 2, 128, 256, 64, True, 0),        # GQA + longer KV
+    (2, 4, 2, 256, 256, 32, False, 0),       # bidirectional
+    (1, 4, 4, 256, 256, 64, True, 128),      # sliding window
+    (1, 2, 1, 128, 128, 128, True, 0),       # dh = 128
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(case, dtype):
+    B, H, KV, T, S, dh, causal, window = case
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(B, H, T, dh), dtype)
+    k = jnp.asarray(rng.randn(B, KV, S, dh), dtype)
+    v = jnp.asarray(rng.randn(B, KV, S, dh), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_tile_sweep():
+    rng = np.random.RandomState(3)
+    q = jnp.asarray(rng.randn(1, 2, 256, 64), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 2, 256, 64), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 2, 256, 64), jnp.float32)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    for tq, tk in [(64, 64), (128, 64), (64, 128), (256, 256)]:
+        got = flash_attention(q, k, v, causal=True, tq=tq, tk=tk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=2e-5)
+
+
+def test_flash_matches_model_attention_layout():
+    """Kernel (B,H,T,dh) vs model attention (B,T,H,dh) agree after transpose."""
+    from repro.models.layers import attention as model_attn
+    rng = np.random.RandomState(4)
+    B, T, H, KV, dh = 2, 128, 4, 2, 32
+    q = jnp.asarray(rng.randn(B, T, H, dh), jnp.float32)
+    k = jnp.asarray(rng.randn(B, T, KV, dh), jnp.float32)
+    v = jnp.asarray(rng.randn(B, T, KV, dh), jnp.float32)
+    out_model = model_attn(q, k, v, causal=True, chunk_q=64, chunk_k=64)
+    out_kernel = flash_attention(q.transpose(0, 2, 1, 3),
+                                 k.transpose(0, 2, 1, 3),
+                                 v.transpose(0, 2, 1, 3), causal=True)
+    np.testing.assert_allclose(np.asarray(out_model),
+                               np.asarray(out_kernel.transpose(0, 2, 1, 3)),
+                               atol=2e-5)

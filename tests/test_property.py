@@ -1,0 +1,123 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ligo import interp_pattern, stack_pattern
+from repro.models import seqmix
+from repro.models.layers import attention
+from repro.optim.compression import dequantize_int8, quantize_int8
+from repro.roofline.hlo import collect_hlo_stats
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(L1=st.integers(1, 8), mult=st.integers(1, 4))
+@settings(**SETTINGS)
+def test_depth_patterns_are_row_stochastic_selections(L1, mult):
+    """Stack/interp rows are one-hot (each new layer copies exactly one old
+    layer) and every source layer is used at least once."""
+    L2 = L1 * mult
+    for pat in (stack_pattern(L2, L1), interp_pattern(L2, L1)):
+        p = np.asarray(pat)
+        assert p.shape == (L2, L1)
+        np.testing.assert_array_equal(p.sum(axis=1), 1.0)
+        assert ((p == 0) | (p == 1)).all()
+        assert (p.sum(axis=0) >= 1).all()
+
+
+@given(n=st.integers(2, 256), scale=st.floats(1e-3, 1e3))
+@settings(**SETTINGS)
+def test_int8_quantization_error_bound(n, scale):
+    rng = np.random.RandomState(n)
+    x = jnp.asarray(rng.randn(n) * scale, jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) * 0.5 + 1e-9 * scale
+
+
+@given(T=st.integers(2, 48), chunk=st.integers(1, 16),
+       seed=st.integers(0, 10))
+@settings(**SETTINGS)
+def test_gla_chunked_equals_recurrent_any_chunking(T, chunk, seed):
+    """The chunkwise-parallel GLA must equal the sequential recurrence for
+    every (T, chunk) combination — incl. ragged final chunks."""
+    rng = np.random.RandomState(seed)
+    B, H, dk, dv = 1, 2, 4, 4
+    q = jnp.asarray(rng.randn(B, T, H, dk), jnp.float32)
+    k = jnp.asarray(rng.randn(B, T, H, dk), jnp.float32)
+    v = jnp.asarray(rng.randn(B, T, H, dv), jnp.float32)
+    lf = -jnp.asarray(rng.rand(B, T, H), jnp.float32)
+    li = -jnp.asarray(rng.rand(B, T, H), jnp.float32)
+    out_c, st_c = seqmix.gla_chunked(q, k, v, lf, li, chunk=chunk)
+    out_r, st_r = seqmix.gla_recurrent_ref(q, k, v, lf, li)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_r),
+                               rtol=3e-4, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(st_c.S), np.asarray(st_r.S),
+                               rtol=3e-4, atol=3e-5)
+
+
+@given(T=st.sampled_from([16, 32, 64]), cq=st.sampled_from([8, 16, 64]),
+       ck=st.sampled_from([8, 32]), window=st.sampled_from([0, 8, 24]),
+       causal=st.booleans(), seed=st.integers(0, 5))
+@settings(**SETTINGS)
+def test_chunked_attention_invariant_to_chunking(T, cq, ck, window, causal,
+                                                 seed):
+    rng = np.random.RandomState(seed)
+    B, H, dh = 1, 2, 8
+    q = jnp.asarray(rng.randn(B, T, H, dh), jnp.float32)
+    k = jnp.asarray(rng.randn(B, T, H, dh), jnp.float32)
+    v = jnp.asarray(rng.randn(B, T, H, dh), jnp.float32)
+    a = attention(q, k, v, causal=causal, window=window, chunk_q=cq,
+                  chunk_k=ck)
+    b = attention(q, k, v, causal=causal, window=window, chunk_q=T,
+                  chunk_k=T)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)
+
+
+@given(probs=st.lists(st.floats(0.01, 1.0), min_size=2, max_size=8))
+@settings(**SETTINGS)
+def test_softmax_attention_rows_normalised(probs):
+    """attention() output is a convex combination of V rows: with constant V
+    the output equals that constant (softmax denominators correct)."""
+    n = len(probs)
+    q = jnp.asarray(np.asarray(probs, np.float32)[None, :, None, None]
+                    * np.ones((1, n, 1, 4), np.float32))
+    k = jnp.asarray(np.random.RandomState(0).randn(1, n, 1, 4), jnp.float32)
+    v = jnp.ones((1, n, 1, 4), jnp.float32) * 2.5
+    out = attention(q, k, v, causal=True, chunk_q=4, chunk_k=4)
+    np.testing.assert_allclose(np.asarray(out), 2.5, atol=1e-5)
+
+
+@given(trips=st.integers(1, 100), m=st.integers(8, 64))
+@settings(max_examples=10, deadline=None)
+def test_hlo_trip_count_correction(trips, m):
+    """The HLO parser multiplies while-body flops by known_trip_count."""
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def scanned(x, ws):
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    ws = jax.ShapeDtypeStruct((trips, m, m), jnp.float32)
+    c = jax.jit(scanned).lower(x, ws).compile()
+    stats = collect_hlo_stats(c.as_text())
+    expected = 2 * trips * m * m * m
+    assert abs(stats["dot_flops"] - expected) / expected < 0.01
+
+
+@given(seed=st.integers(0, 20))
+@settings(**SETTINGS)
+def test_ligo_depth_blend_linearity(seed):
+    """Depth blending is linear: blend(a·W1 + b·W2) == a·blend(W1)+b·blend(W2)."""
+    rng = np.random.RandomState(seed)
+    w = jnp.asarray(rng.randn(5, 3), jnp.float32)
+    W1 = jnp.asarray(rng.randn(3, 4, 4), jnp.float32)
+    W2 = jnp.asarray(rng.randn(3, 4, 4), jnp.float32)
+    blend = lambda W: jnp.einsum("kl,lab->kab", w, W)  # noqa: E731
+    lhs = blend(2.0 * W1 - 0.5 * W2)
+    rhs = 2.0 * blend(W1) - 0.5 * blend(W2)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), atol=1e-5)

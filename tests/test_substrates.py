@@ -1,0 +1,197 @@
+"""Optimizer / schedules / compression / data / checkpoint unit tests."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, list_steps
+from repro.data import batch_for_step, gen_tokens, optimal_loss
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         compression, global_norm, sgd_init, sgd_update,
+                         warmup_cosine, warmup_linear)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+def test_adamw_matches_reference_math():
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0]), "b": jnp.asarray([[0.5, 0.5]])}
+    g = {"w": jnp.asarray([0.1, 0.2, -0.3]), "b": jnp.asarray([[1.0, -1.0]])}
+    st = adamw_init(p)
+    lr, b1, b2, eps, wd = 0.1, 0.9, 0.999, 1e-8, 0.01
+    new_p, st2 = adamw_update(g, st, p, lr=lr, b1=b1, b2=b2, eps=eps,
+                              weight_decay=wd)
+    # manual reference, step 1
+    for k in ("w", "b"):
+        m = (1 - b1) * np.asarray(g[k])
+        v = (1 - b2) * np.asarray(g[k]) ** 2
+        mh, vh = m / (1 - b1), v / (1 - b2)
+        step = mh / (np.sqrt(vh) + eps)
+        if np.asarray(p[k]).ndim >= 2:       # decay applies to matrices only
+            step = step + wd * np.asarray(p[k])
+        np.testing.assert_allclose(np.asarray(new_p[k]),
+                                   np.asarray(p[k]) - lr * step, rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_adamw_optimises_quadratic():
+    p = {"w": jnp.asarray(np.random.RandomState(0).randn(8))}
+    st = adamw_init(p)
+    for i in range(300):
+        g = jax.grad(lambda q: jnp.sum((q["w"] - 3.0) ** 2))(p)
+        p, st = adamw_update(g, st, p, lr=0.05, weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(p["w"]), 3.0, atol=1e-2)
+
+
+def test_sgd_momentum():
+    p = {"w": jnp.zeros(4)}
+    st = sgd_init(p)
+    g = {"w": jnp.ones(4)}
+    p, st = sgd_update(g, st, p, lr=0.1, momentum=0.9)
+    np.testing.assert_allclose(np.asarray(p["w"]), -0.1)
+    p, st = sgd_update(g, st, p, lr=0.1, momentum=0.9)
+    np.testing.assert_allclose(np.asarray(p["w"]), -0.1 - 0.19, rtol=1e-6)
+
+
+def test_global_norm_clip():
+    g = {"a": jnp.full((3,), 4.0), "b": jnp.full((4,), 3.0)}
+    # norm = sqrt(3*16 + 4*9) = sqrt(84)
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(norm), np.sqrt(84.0), rtol=1e-6)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+    same, _ = clip_by_global_norm(g, 100.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), 4.0)
+
+
+def test_schedules():
+    lr0 = float(warmup_cosine(0, base_lr=1.0, warmup_steps=10,
+                              total_steps=100))
+    lr_w = float(warmup_cosine(10, base_lr=1.0, warmup_steps=10,
+                               total_steps=100))
+    lr_end = float(warmup_cosine(100, base_lr=1.0, warmup_steps=10,
+                                 total_steps=100, end_frac=0.1))
+    assert lr0 == 0.0 and abs(lr_w - 1.0) < 1e-6 and abs(lr_end - 0.1) < 1e-6
+    assert float(warmup_linear(100, base_lr=1.0, warmup_steps=10,
+                               total_steps=100, end_frac=0.0)) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression
+# ---------------------------------------------------------------------------
+def test_quantize_roundtrip_bound():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(1000), jnp.float32)
+    q, s = compression.quantize_int8(x)
+    err = np.abs(np.asarray(compression.dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_convergence():
+    """EF-int8 SGD reaches the same optimum as exact SGD on a quadratic."""
+    target = jnp.asarray(np.random.RandomState(1).randn(64))
+    p = {"w": jnp.zeros(64)}
+    err = compression.init_error(p)
+    for i in range(400):
+        g = jax.grad(lambda q: jnp.sum((q["w"] - target) ** 2))(p)
+        dec, err = compression.compress_update(g, err)
+        p = jax.tree.map(lambda a, d: a - 0.02 * d, p, dec)
+    np.testing.assert_allclose(np.asarray(p["w"]), np.asarray(target),
+                               atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# Data
+# ---------------------------------------------------------------------------
+def test_data_determinism_and_restart():
+    a = gen_tokens(0, 5, 4, 32, 128)
+    b = gen_tokens(0, 5, 4, 32, 128)
+    np.testing.assert_array_equal(a, b)
+    c = gen_tokens(0, 6, 4, 32, 128)
+    assert not np.array_equal(a, c)
+
+
+def test_data_row_offset_matches_global():
+    full = gen_tokens(0, 3, 8, 16, 64)
+    lo = gen_tokens(0, 3, 4, 16, 64, row_offset=0)
+    hi = gen_tokens(0, 3, 4, 16, 64, row_offset=4)
+    np.testing.assert_array_equal(full, np.concatenate([lo, hi], 0))
+
+
+def test_data_learnable_structure():
+    """Markov structure: successor entropy must be far below uniform."""
+    toks = gen_tokens(0, 0, 64, 256, 128)
+    # empirical conditional entropy via bigram counts
+    from collections import Counter, defaultdict
+    trans = defaultdict(Counter)
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            trans[int(a)][int(b)] += 1
+    ents = []
+    for a, cnt in trans.items():
+        tot = sum(cnt.values())
+        ps = np.array([c / tot for c in cnt.values()])
+        ents.append(-(ps * np.log(ps)).sum())
+    assert np.mean(ents) < 0.6 * np.log(128)
+    assert abs(optimal_loss(128) - np.mean(ents)) < 1.0
+
+
+def test_mlm_batches():
+    from repro.configs.paper_models import BERT_SMALL
+    cfg = BERT_SMALL.scaled(vocab_size=64)
+    b = batch_for_step(cfg, 0, 4, 32, seed=0)
+    assert set(b) == {"tokens", "mask", "labels"}
+    assert (b["tokens"][b["mask"]] == 63).all()      # [MASK] id
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+def _tree():
+    return {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                       "nested": {"b": jnp.ones((4,), jnp.bfloat16)}},
+            "step": jnp.asarray(7)}
+
+
+def test_checkpoint_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2, async_write=False)
+        t = _tree()
+        mgr.save(10, t, meta={"note": "x"}, block=True)
+        restored, meta = mgr.restore_latest(jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t))
+        assert meta["step"] == 10 and meta["note"] == "x"
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+            assert a.dtype == b.dtype
+
+
+def test_checkpoint_retention_and_async():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2, async_write=True)
+        t = _tree()
+        for s in (1, 2, 3, 4):
+            mgr.save(s, t)
+        mgr.wait()
+        assert list_steps(d) == [3, 4]
+
+
+def test_checkpoint_shape_mismatch_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_write=False)
+        mgr.save(1, _tree(), block=True)
+        bad = {"params": {"w": jnp.zeros((3, 3)),
+                          "nested": {"b": jnp.ones((4,), jnp.bfloat16)}},
+               "step": jnp.asarray(0)}
+        with pytest.raises(ValueError):
+            mgr.restore_latest(bad)
+
+
+def test_checkpoint_atomicity_tmpdirs_cleaned():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_write=False)
+        mgr.save(1, _tree(), block=True)
+        assert not [f for f in os.listdir(d) if f.startswith(".tmp")]
