@@ -64,16 +64,33 @@ def bench() -> List[Tuple[str, float, str]]:
     rows.append(("flash_attention_pallas[interpret]", float("nan"),
                  f"max_err={err:.1e}"))
 
-    # --- full apply_ligo on the real BERT pair ---
+    # --- fused blend-expand custom_vjp: grad path re-validated ---
+    from repro.kernels import ligo_blend_expand_vjp
+    def vjp_loss(w, B, W):
+        return jnp.sum(ligo_blend_expand_vjp(w, B, W, use_kernel=False) ** 2)
+    def ref_loss(w, B, W):
+        return jnp.sum(ligo_blend_expand_ref(w, B, W) ** 2)
+    g = jax.grad(vjp_loss, argnums=(0, 1, 2))(w, B, W)
+    gr = jax.grad(ref_loss, argnums=(0, 1, 2))(w, B, W)
+    gerr = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(g, gr))
+    us = _time(jax.jit(jax.grad(vjp_loss, argnums=(0, 1, 2))), w, B, W)
+    rows.append(("ligo_blend_expand_vjp_grad[bert_s2b]", us,
+                 f"max_err={gerr:.1e}"))
+
+    # --- full apply_ligo on the real BERT pair: plan engine vs legacy ---
     from repro.configs.paper_models import BERT_SMALL, BERT_BASE
-    from repro.core import apply_ligo, init_ligo_params
+    from repro.core import apply_ligo, init_ligo_params, plan_for
     from repro.models import init_params
     c1 = BERT_SMALL.scaled(dtype="float32")
     c2 = BERT_BASE.scaled(dtype="float32")
     sp = init_params(c1, jax.random.PRNGKey(0))
     lg = init_ligo_params(jax.random.PRNGKey(1), c1, c2)
-    f = jax.jit(lambda l, s: apply_ligo(l, s, c1, c2))
+    ex = plan_for(c1, c2, sp).executor(use_kernel=False)
+    us = _time(ex, lg, sp, iters=3)
+    rows.append(("apply_ligo_plan[bert-small->base]", us,
+                 f"{c2.param_count() / 1e6:.0f}Mparam_out"))
+    f = jax.jit(lambda l, s: apply_ligo(l, s, c1, c2, engine="legacy"))
     us = _time(f, lg, sp, iters=3)
-    rows.append(("apply_ligo[bert-small->base]", us,
+    rows.append(("apply_ligo_legacy[bert-small->base]", us,
                  f"{c2.param_count() / 1e6:.0f}Mparam_out"))
     return rows

@@ -110,6 +110,16 @@ def main() -> None:
     for name, us, derived in kernel_bench():
         _row(name, us, derived)
 
+    from benchmarks.bench_growth import engine_bench
+    res = engine_bench(quick=not args.full)
+    for e in res["entries"]:
+        wall = e["wall_ms"]
+        _row(e["name"], wall * 1e3 if wall is not None else float("nan"),
+             f"est_hbm={e['est_hbm_bytes']}")
+    for pair, s in res["speedup"].items():
+        _row(f"growth_engine_speedup[{pair}]", float("nan"),
+             ";".join(f"{k}={v}" for k, v in s.items()))
+
     roofline_rows()
 
     if not args.skip_growth:

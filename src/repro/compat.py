@@ -1,0 +1,65 @@
+"""Version shims for jax sharding APIs that moved between 0.4.x and 0.5+.
+
+Newer jax exposes ``jax.sharding.AxisType``, ``jax.set_mesh`` and
+``jax.shard_map``; jax 0.4.37 (this container) predates all three. Code and
+tests import the equivalents from here so one source tree runs on both:
+
+- :func:`make_mesh` — ``jax.make_mesh`` with ``axis_types`` when supported,
+  plain ``jax.make_mesh`` otherwise (0.4.x meshes are implicitly "auto").
+- :func:`set_mesh` — ``jax.set_mesh(mesh)`` context manager when available;
+  on 0.4.x the ``Mesh`` object itself is the context manager.
+- :func:`shard_map` — ``jax.shard_map`` or the 0.4.x
+  ``jax.experimental.shard_map.shard_map``, translating the ``check_vma``
+  kwarg to its old name ``check_rep``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Device mesh with auto axis types on every jax version."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            tuple(shape), tuple(axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``with set_mesh(mesh): ...`` works on both old and new jax.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh  # jax.sharding.Mesh is its own context manager on 0.4.x
+
+
+def get_mesh():
+    """The ambient mesh installed by :func:`set_mesh`, or None.
+
+    New jax: ``jax.sharding.get_abstract_mesh()``. 0.4.x: the thread-local
+    physical mesh set by the ``Mesh`` context manager.
+    """
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        m = jax.sharding.get_abstract_mesh()
+        return None if m is None or getattr(m, "empty", True) else m
+    from jax.interpreters import pxla
+    m = pxla.thread_resources.env.physical_mesh
+    return None if m is None or getattr(m, "empty", True) else m
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              check_vma: Optional[bool] = None):
+    """``jax.shard_map`` across versions (``check_vma`` ↔ ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

@@ -1,10 +1,17 @@
 """LiGO — the paper's primary contribution: a learned linear growth operator
-that initialises a large transformer from a smaller pretrained one."""
+that initialises a large transformer from a smaller pretrained one.
+
+Growth executes through the compiled :class:`repro.core.plan.GrowthPlan`
+engine by default (expander caching, leaf batching, fused Pallas kernel on
+TPU); the legacy per-leaf walk stays available as
+``apply_ligo(..., engine="legacy")`` and is the correctness oracle."""
 from repro.core.ligo import (apply_ligo, count_ligo_params, gamma_expand,
                              init_ligo_params, interp_pattern, stack_pattern)
-from repro.core.grow import grow, ligo_loss, train_ligo
+from repro.core.grow import TRACE_COUNTS, grow, ligo_loss, train_ligo
+from repro.core.plan import GrowthPlan, plan_for
 from repro.core import operators, spec
 
 __all__ = ["apply_ligo", "init_ligo_params", "count_ligo_params",
            "gamma_expand", "stack_pattern", "interp_pattern", "grow",
-           "ligo_loss", "train_ligo", "operators", "spec"]
+           "ligo_loss", "train_ligo", "GrowthPlan", "plan_for",
+           "TRACE_COUNTS", "operators", "spec"]

@@ -10,13 +10,21 @@
   operators, no learning.
 - method="random": fresh init of the big model (the from-scratch baseline).
 
+The LiGO phase runs as a **jitted, buffer-donated ``lax.scan``**: batches are
+prefetched and stacked per chunk, the (grad → momentum → SGD) step is scanned
+inside one compiled program, and the growth operator itself is applied through
+the compiled :class:`repro.core.plan.GrowthPlan` — so the phase traces exactly
+once and never re-resolves expanders per step (asserted by
+``TRACE_COUNTS["train_ligo"]`` in the tests).
+
 Works under pjit: pass ``mesh``-sharded small params and a data iterator that
 yields global batches; apply_ligo is pure einsums so GSPMD shards the growth.
 """
 from __future__ import annotations
 
+from collections import Counter
 from functools import partial
-from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+from typing import Any, Dict, Iterator, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,40 +35,95 @@ from repro.core import operators as ops
 from repro.models.losses import loss_fn
 from repro.models.model import init_params
 
+# How many times each compiled region was (re-)traced — tests assert the LiGO
+# phase compiles once regardless of step count.
+TRACE_COUNTS: Counter = Counter()
+
 
 def ligo_loss(ligo, small_params, cfg1: ModelConfig, cfg2: ModelConfig,
-              batch, *, loss_chunk: int = 0) -> jax.Array:
-    big = apply_ligo(ligo, small_params, cfg1, cfg2)
+              batch, *, loss_chunk: int = 0, engine: str = "plan"
+              ) -> jax.Array:
+    big = apply_ligo(ligo, small_params, cfg1, cfg2, engine=engine)
     loss, _ = loss_fn(big, cfg2, batch, loss_chunk=loss_chunk)
     return loss
+
+
+def _stack_batches(batches):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
 
 
 def train_ligo(ligo, small_params, cfg1: ModelConfig, cfg2: ModelConfig,
                data_it: Iterator[Dict[str, jax.Array]], *,
                steps: int = 100, lr: float = 1e-3, momentum: float = 0.9,
                loss_chunk: int = 0, jit: bool = True,
-               log_every: int = 0) -> Tuple[Dict, list]:
-    """The ~100-step SGD phase optimising only the LiGO parameters."""
+               log_every: int = 0, engine: str = "plan",
+               scan_chunk: int = 0) -> Tuple[Dict, list]:
+    """The ~100-step SGD phase optimising only the LiGO parameters.
+
+    The phase runs as chunks of ``scan_chunk`` steps: each chunk prefetches
+    + stacks its batches and executes a single jitted ``lax.scan`` over the
+    (grad, momentum, SGD) step, with the (ligo, momentum) carry buffers
+    donated between chunks. The default picks the largest divisor of
+    ``steps`` ≤ 32, so batch memory stays bounded and every chunk has the
+    same shape — one trace total (expander resolution and growth-plan work
+    happen at trace time only). An explicit ``scan_chunk`` that does not
+    divide ``steps`` still works but the ragged final chunk compiles a
+    second program.
+    """
     grad_fn = jax.value_and_grad(
-        partial(ligo_loss, cfg1=cfg1, cfg2=cfg2, loss_chunk=loss_chunk),
+        partial(ligo_loss, cfg1=cfg1, cfg2=cfg2, loss_chunk=loss_chunk,
+                engine=engine),
         argnums=0)
 
-    def sgd_step(ligo, mom, batch):
+    def sgd_step(carry, batch):
+        ligo, mom = carry
         loss, g = grad_fn(ligo, small_params, batch=batch)
         mom = jax.tree.map(lambda m, gg: momentum * m + gg, mom, g)
         ligo = jax.tree.map(lambda p, m: p - lr * m, ligo, mom)
-        return ligo, mom, loss
+        return (ligo, mom), loss
+
+    def run_chunk(ligo, mom, batches):
+        TRACE_COUNTS["train_ligo"] += 1
+        (ligo, mom), losses = jax.lax.scan(sgd_step, (ligo, mom), batches)
+        return ligo, mom, losses
 
     if jit:
-        sgd_step = jax.jit(sgd_step)
+        # Donating the (ligo, momentum) carry keeps the phase zero-copy
+        # between chunks; CPU jax warns on donation, so gate it. The first
+        # chunk would otherwise donate (delete) the *caller's* operator
+        # buffers, so hand it an owned copy.
+        donate = (0, 1) if jax.default_backend() != "cpu" else ()
+        run_chunk = jax.jit(run_chunk, donate_argnums=donate)
+        if donate:
+            ligo = jax.tree.map(jnp.array, ligo)
+
+    if steps <= 0:
+        return ligo, []
+    if scan_chunk > 0:
+        chunk = scan_chunk
+    else:
+        # equal chunks (single trace) from a divisor in [16, 32] when one
+        # exists; divisor-poor step counts (primes) fall back to full
+        # 32-chunks + one ragged tail — a second trace, but the dispatch
+        # amortisation is kept.
+        chunk = min(steps, 32)
+        while chunk > 16 and steps % chunk:
+            chunk -= 1
+        if steps % chunk:
+            chunk = min(steps, 32)
     mom = jax.tree.map(jnp.zeros_like, ligo)
-    losses = []
-    for i in range(steps):
-        batch = next(data_it)
-        ligo, mom, loss = sgd_step(ligo, mom, batch)
-        losses.append(float(loss))
-        if log_every and i % log_every == 0:
-            print(f"[ligo] step {i:4d} loss {losses[-1]:.4f}")
+    losses: list = []
+    done = 0
+    while done < steps:
+        n = min(chunk, steps - done)
+        batches = _stack_batches([next(data_it) for _ in range(n)])
+        ligo, mom, chunk_losses = run_chunk(ligo, mom, batches)
+        losses.extend(float(l) for l in chunk_losses)
+        done += n
+        if log_every:
+            for s in range(done - n, done):
+                if s % log_every == 0:
+                    print(f"[ligo] step {s:4d} loss {losses[s]:.4f}")
     return ligo, losses
 
 
@@ -69,6 +132,7 @@ def grow(small_params, cfg1: ModelConfig, cfg2: ModelConfig, *,
          data_it: Optional[Iterator] = None, ligo_steps: int = 100,
          ligo_lr: float = 1e-3, ligo_momentum: float = 0.9,
          loss_chunk: int = 0, depth_init: str = "stack",
+         engine: str = "plan",
          ) -> Tuple[Dict, Dict[str, Any]]:
     """Grow Θ_small → Θ_large. Returns (big_params, info)."""
     key = key if key is not None else jax.random.PRNGKey(0)
@@ -89,10 +153,10 @@ def grow(small_params, cfg1: ModelConfig, cfg2: ModelConfig, *,
             op, losses = train_ligo(op, small_params, cfg1, cfg2, data_it,
                                     steps=ligo_steps, lr=ligo_lr,
                                     momentum=ligo_momentum,
-                                    loss_chunk=loss_chunk)
+                                    loss_chunk=loss_chunk, engine=engine)
             info["ligo_losses"] = losses
     else:
         raise ValueError(method)
-    big = apply_ligo(op, small_params, cfg1, cfg2)
+    big = apply_ligo(op, small_params, cfg1, cfg2, engine=engine)
     info["operator"] = op
     return big, info

@@ -17,6 +17,13 @@ the LiGO training phase backpropagates the task loss through it into the
 expanders. Untied in-expanders (needed to express Net2Net's normalised
 duplication exactly, App. A Eq. 12) are supported by storing an override under
 ``"<name>__in"``.
+
+Two execution engines: ``engine="plan"`` (default) compiles the growth once
+per (cfg1, cfg2, tree) into a :class:`repro.core.plan.GrowthPlan` — cached
+expander resolution, leaves batched by (family, shape, expander pair),
+min-FLOP contraction order, fused Pallas blend-expand on TPU;
+``engine="legacy"`` is the original per-leaf walk below, kept as the
+correctness oracle (tests assert plan == legacy for every operator).
 """
 from __future__ import annotations
 
@@ -180,8 +187,23 @@ def count_ligo_params(ligo: Params) -> int:
 # Apply: Θ_large = M(Θ_small)
 # ---------------------------------------------------------------------------
 def apply_ligo(ligo: Params, small: Params, cfg1: ModelConfig,
-               cfg2: ModelConfig) -> Params:
-    """Grow a small model's parameter tree into the large architecture."""
+               cfg2: ModelConfig, *, engine: str = "plan",
+               use_kernel: Optional[bool] = None) -> Params:
+    """Grow a small model's parameter tree into the large architecture.
+
+    ``engine="plan"`` (default) routes through the compiled
+    :class:`repro.core.plan.GrowthPlan` — expanders resolved once per call,
+    leaves batched by (family, shape, expander pair), fused Pallas
+    blend-expand on TPU. ``engine="legacy"`` keeps the original per-leaf
+    einsum walk as the correctness oracle. ``use_kernel`` forces/disables the
+    fused Pallas path (plan engine only; default: auto — TPU yes, CPU no).
+    """
+    if engine in ("plan", "auto"):
+        from repro.core.plan import plan_for
+        plan = plan_for(cfg1, cfg2, small)
+        return plan.executor(use_kernel=use_kernel)(ligo, small)
+    if engine != "legacy":
+        raise ValueError(f"unknown growth engine {engine!r}")
     width = ligo["width"]
     top = S.top_spec()
     out_layers: Params = {}

@@ -1,0 +1,358 @@
+"""GrowthPlan: a compiled, fused growth engine for ``apply_ligo``.
+
+The legacy ``apply_ligo`` walks the parameter tree leaf by leaf, re-resolving
+every expander expression (``gamma`` block-repeats, ``seg`` block-diagonals)
+per leaf per call and emitting per-leaf einsums. That is the hot path of the
+whole reproduction: it runs — and is differentiated through — on every one of
+the ~100 LiGO SGD steps, and again for the final materialisation.
+
+A :class:`GrowthPlan` is compiled **once** per ``(cfg1, cfg2, tree shape)``
+and fixes, ahead of time:
+
+1. the set of *distinct* ``(expander expression, role)`` pairs — resolved
+   exactly once per apply (shared across all leaves) instead of per leaf;
+2. a grouping of parameter leaves by ``(module family, shape, in/out-expander
+   pair)`` — each group executes as a single stacked/batched contraction
+   instead of per-leaf einsums;
+3. a static, FLOP-cost-model choice of contraction order per group
+   (expand-then-blend vs blend-then-expand), and whether the group is
+   eligible for the fused Pallas ``ligo_blend_expand`` kernel
+   (:func:`repro.kernels.ligo_blend_expand_vjp`, a ``jax.custom_vjp`` whose
+   backward pass re-uses the fused kernel) — on TPU the widened
+   ``(L1, D2o, D2i)`` stack then never exists in HBM, forward or backward.
+
+``plan_for(cfg1, cfg2, small)`` memoises plans; ``plan.executor()`` memoises
+one jitted callable per plan, so eager callers (``grow()``'s final
+materialisation, benchmarks, serving-time elastic growth) pay a single
+dispatch instead of hundreds.
+
+The legacy path survives as ``apply_ligo(..., engine="legacy")`` — the
+correctness oracle every plan output is tested against.
+"""
+from __future__ import annotations
+
+import functools
+from collections import Counter
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import spec as S
+from repro.core.ligo import (_flatten, _kind_counts, _unflatten,
+                             resolve_expander)
+from repro.kernels.ops import ligo_blend_expand_vjp
+
+# Trace-time instrumentation (tests assert expanders are resolved once per
+# apply-trace, not once per leaf, and that train_ligo never re-traces).
+RESOLVE_COUNTS: Counter = Counter()
+
+ExprRef = Tuple[Any, str]          # (hashable expr key, role) — plan.exprs key
+
+
+def _expr_key(expr) -> Any:
+    """Canonical hashable key for a spec expander expression."""
+    if expr is None or isinstance(expr, str):
+        return expr
+    kind = expr[0]
+    if kind == "gamma":
+        return ("gamma", _expr_key(expr[1]))
+    if kind == "seg":
+        return ("seg", tuple((_expr_key(sub), n1, n2)
+                             for (sub, n1, n2) in expr[1]))
+    raise ValueError(expr)
+
+
+def _expr_dims(expr, cfg1: ModelConfig, cfg2: ModelConfig) -> Tuple[int, int]:
+    """Static (d2, d1) shape of a resolved expander expression."""
+    if isinstance(expr, str):
+        return S.width_dims(cfg2)[expr], S.width_dims(cfg1)[expr]
+    if expr[0] == "gamma":
+        return (cfg2.n_heads * cfg2.d_head, cfg1.n_heads * cfg1.d_head)
+    if expr[0] == "seg":
+        return (sum(n2 for (_, _, n2) in expr[1]),
+                sum(n1 for (_, n1, _) in expr[1]))
+    raise ValueError(expr)
+
+
+@dataclass(frozen=True)
+class LeafGroup:
+    """A batch of same-shaped leaves sharing one (in, out) expander pair."""
+    kind: str                      # layer-stack kind; "" for top-level params
+    stacked: bool                  # leading L1 layer dim present
+    paths: Tuple[str, ...]
+    shape: Tuple[int, ...]         # per-leaf shape (incl. L1 when stacked)
+    in_ref: Optional[ExprRef]
+    out_ref: Optional[ExprRef]
+    vec: bool                      # per-layer vector leaf (out-expander only)
+    order: Tuple[str, ...]         # op sequence drawn from {in, out, blend}
+    kernel_ok: bool                # fused Pallas custom_vjp path eligible
+
+
+def _kernel_dim_ok(d: int) -> bool:
+    """128-tileable: one tile (≤128, sublane-aligned) or a multiple of 128."""
+    return (d <= 128 and d % 8 == 0) or d % 128 == 0
+
+
+def _best_order(ops_present, L1: int, L2: int, extra: int, a: int, b: int,
+                i: int, j: int) -> Tuple[str, ...]:
+    """Min-FLOP ordering of the (commuting) expand/blend contractions.
+
+    The three ops are bilinear maps applied to independent axes, so any
+    ordering is semantically equal; cost is not. Exhaustive search over the
+    ≤ 3! arrangements with a running (layers, a, b) dim state.
+    """
+    from itertools import permutations
+    best, best_cost = None, None
+    for perm in dict.fromkeys(permutations(ops_present)):
+        l, ca, cb = L1, a, b
+        cost = 0
+        for op in perm:
+            if op == "in":
+                cost += extra * l * i * ca * cb
+                ca = i
+            elif op == "out":
+                cost += extra * l * ca * cb * j
+                cb = j
+            else:  # blend
+                cost += extra * L2 * L1 * ca * cb
+                l = L2
+        if best_cost is None or cost < best_cost:
+            best, best_cost = perm, cost
+    return best if best is not None else ()
+
+
+def _plan_group(kind: str, stacked: bool, paths, shape, in_e, out_e,
+                vec: bool, L2: int, cfg1, cfg2) -> LeafGroup:
+    """Choose contraction order + kernel eligibility from static shapes."""
+    in_ref = None if in_e is None else (_expr_key(in_e), "in")
+    out_ref = None if out_e is None else (_expr_key(out_e), "out")
+    blended = stacked
+    L1 = shape[0] if stacked else 1
+    if vec:
+        n = shape[-1]
+        j = _expr_dims(out_e, cfg1, cfg2)[0] if out_e is not None else n
+        ops_present = tuple(op for op, c in (("out", out_e is not None),
+                                             ("blend", blended)) if c)
+        order = _best_order(ops_present, L1, L2, 1, 1, n, 1, j)
+        return LeafGroup(kind, stacked, tuple(paths), tuple(shape), None,
+                         out_ref, True, order, False)
+
+    a, b = shape[-2], shape[-1]
+    extra = 1
+    for d in shape[(1 if stacked else 0):-2]:
+        extra *= d
+    i = _expr_dims(in_e, cfg1, cfg2)[0] if in_e is not None else a
+    j = _expr_dims(out_e, cfg1, cfg2)[0] if out_e is not None else b
+    ops_present = tuple(op for op, c in (("in", in_e is not None),
+                                         ("out", out_e is not None),
+                                         ("blend", blended)) if c)
+    order = _best_order(ops_present, L1, L2, extra, a, b, i, j)
+    kernel_ok = (blended and in_e is not None and len(shape) == 3
+                 and all(_kernel_dim_ok(d) for d in (i, a, b)))
+    return LeafGroup(kind, stacked, tuple(paths), tuple(shape), in_ref,
+                     out_ref, False, order, kernel_ok)
+
+
+class GrowthPlan:
+    """Static execution plan for growing Θ_small → Θ_large.
+
+    Built once per ``(cfg1, cfg2, parameter-tree signature)`` via
+    :func:`plan_for`; ``apply`` is a pure, differentiable function of
+    ``(ligo_params, small_params)`` with identical semantics to the legacy
+    ``apply_ligo`` walk.
+    """
+
+    def __init__(self, cfg1: ModelConfig, cfg2: ModelConfig,
+                 groups: Tuple[LeafGroup, ...],
+                 exprs: Dict[ExprRef, Any]):
+        self.cfg1, self.cfg2 = cfg1, cfg2
+        self.groups = groups
+        self.exprs = exprs
+        self._executors: Dict[Any, Any] = {}
+
+    # -- resolution cache (one resolve per distinct (expr, role) per apply) --
+    def _expander_table(self, width) -> Dict[ExprRef, jax.Array]:
+        table = {}
+        for ref_, expr in self.exprs.items():
+            RESOLVE_COUNTS["resolve"] += 1
+            table[ref_] = resolve_expander(expr, width, self.cfg1, self.cfg2,
+                                           ref_[1])
+        return table
+
+    # -- group execution ----------------------------------------------------
+    # Expansions execute as single large GEMMs (leading group/layer dims
+    # folded into the GEMM M dim) rather than per-leaf batched dot_generals —
+    # XLA:CPU runs batched dots well below plain-GEMM throughput, and the
+    # fold is free for the out-side (row-major last dim) / one transpose for
+    # the in-side.
+    @staticmethod
+    def _expand_out(X: jax.Array, E: jax.Array) -> jax.Array:
+        """(..., b) · Eᵀ → (..., j) as one (prod(...), b)×(b, j) GEMM."""
+        s = X.shape
+        out = X.reshape(-1, s[-1]) @ E.astype(X.dtype).T
+        return out.reshape(s[:-1] + (E.shape[0],))
+
+    @staticmethod
+    def _expand_in(X: jax.Array, E: jax.Array) -> jax.Array:
+        """E · (..., a, b) → (..., i, b) as one (i, a)×(a, prod(·)) GEMM."""
+        a = X.shape[-2]
+        Xm = jnp.moveaxis(X, -2, 0)                      # (a, ..., b)
+        s = Xm.shape
+        out = E.astype(X.dtype) @ Xm.reshape(a, -1)
+        return jnp.moveaxis(out.reshape((E.shape[0],) + s[1:]), 0, -2)
+
+    @staticmethod
+    def _run_group(g: LeafGroup, X: jax.Array, E_in, E_out, w_g):
+        """X: (G, ...) stacked leaves; w_g: (G, L2, L1) blends or None.
+
+        Executes the group's static min-FLOP op sequence; the blend op is
+        skipped when the operator tree carries no depth blends for this kind.
+        """
+        for op in g.order:
+            if op == "in":
+                X = GrowthPlan._expand_in(X, E_in)
+            elif op == "out":
+                X = GrowthPlan._expand_out(X, E_out)
+            elif w_g is not None:
+                X = jnp.einsum("gkl,gl...->gk...", w_g.astype(X.dtype), X)
+        return X
+
+    @staticmethod
+    def _run_group_fused(g: LeafGroup, leaves, E_in, E_out, w_g):
+        """Fused Pallas path: blend + left-expand per leaf via the custom_vjp
+        kernel (the widened (L1, D2o, ·) stack never hits HBM), right-expand
+        as a plain matmul. Unrolled over the (small) group — each member is
+        one kernel launch."""
+        outs = []
+        for gi, W in enumerate(leaves):
+            P = ligo_blend_expand_vjp(w_g[gi], E_in.astype(W.dtype), W,
+                                      use_kernel=True)
+            if E_out is not None:
+                P = jnp.einsum("kab,jb->kaj", P, E_out.astype(P.dtype))
+            outs.append(P)
+        return jnp.stack(outs)
+
+    def apply(self, ligo, small, *, use_kernel: Optional[bool] = None):
+        """Θ_large = M(Θ_small) — plan-driven, differentiable in both args."""
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+        width = ligo["width"]
+        depth = ligo.get("depth", {})
+        table = self._expander_table(width)
+
+        flat_stacks = {kind: _flatten(stack)
+                       for kind, stack in small["layers"].items()}
+        flat_top = _flatten({k: v for k, v in small.items() if k != "layers"})
+
+        grown_stacks: Dict[str, Dict[str, jax.Array]] = {
+            kind: {} for kind in flat_stacks}
+        grown_top: Dict[str, jax.Array] = {}
+
+        for g in self.groups:
+            src = flat_stacks[g.kind] if g.kind else flat_top
+            leaves = [src[p] for p in g.paths]
+            blend_tree = depth.get(g.kind) if (g.stacked and g.kind) else None
+            w_g = (jnp.stack([blend_tree[p] for p in g.paths])
+                   if blend_tree is not None else None)
+            E_in = table[g.in_ref] if g.in_ref is not None else None
+            E_out = table[g.out_ref] if g.out_ref is not None else None
+            if use_kernel and g.kernel_ok and w_g is not None:
+                out = self._run_group_fused(g, leaves, E_in, E_out, w_g)
+            else:
+                X = leaves[0][None] if len(leaves) == 1 else jnp.stack(leaves)
+                out = self._run_group(g, X, E_in, E_out, w_g)
+            dst = grown_stacks[g.kind] if g.kind else grown_top
+            for gi, p in enumerate(g.paths):
+                dst[p] = out[gi]
+
+        out_tree: Dict[str, Any] = {"layers": {
+            kind: _unflatten(grown) for kind, grown in grown_stacks.items()}}
+        out_tree.update(_unflatten(grown_top))
+        return out_tree
+
+    def executor(self, *, use_kernel: Optional[bool] = None):
+        """A cached jitted ``(ligo, small) -> big`` for this plan."""
+        key = use_kernel
+        if key not in self._executors:
+            self._executors[key] = jax.jit(
+                functools.partial(GrowthPlan.apply, self,
+                                  use_kernel=use_kernel))
+        return self._executors[key]
+
+
+# ---------------------------------------------------------------------------
+# Plan construction (memoised on config pair + tree signature)
+# ---------------------------------------------------------------------------
+def _tree_signature(small) -> Tuple:
+    layers = tuple(sorted(
+        (kind, tuple(sorted((p, tuple(v.shape))
+                            for p, v in _flatten(stack).items())))
+        for kind, stack in small["layers"].items()))
+    top = tuple(sorted((p, tuple(v.shape)) for p, v in _flatten(
+        {k: v for k, v in small.items() if k != "layers"}).items()))
+    return (layers, top)
+
+
+@functools.lru_cache(maxsize=128)
+def _build_plan(cfg1: ModelConfig, cfg2: ModelConfig, sig) -> GrowthPlan:
+    layers_sig, top_sig = sig
+    c2 = _kind_counts(cfg2)
+    groups = []
+    exprs: Dict[ExprRef, Any] = {}
+
+    def register(expr, role: str) -> Optional[ExprRef]:
+        if expr is None:
+            return None
+        ref_ = (_expr_key(expr), role)
+        exprs.setdefault(ref_, expr)
+        return ref_
+
+    for kind, leaves in layers_sig:
+        lspec = S.layer_spec(kind, cfg1, cfg2)
+        stacked = kind != "shared_attn"
+        L2 = c2.get(kind, 0)
+        buckets: Dict[Tuple, list] = {}
+        for path, shape in leaves:
+            in_e, out_e = lspec[path]
+            vec = len(shape) == (2 if stacked else 1)
+            key = (shape, _expr_key(in_e) if not vec else None,
+                   _expr_key(out_e), vec)
+            buckets.setdefault(key, []).append((path, in_e, out_e))
+        for (shape, _ik, _ok, vec), members in sorted(buckets.items(),
+                                                      key=str):
+            paths = tuple(p for p, _, _ in members)
+            in_e, out_e = members[0][1], members[0][2]
+            g = _plan_group(kind, stacked, paths, shape,
+                            None if vec else in_e, out_e, vec, L2, cfg1, cfg2)
+            if not vec:
+                register(in_e, "in")
+            register(out_e, "out")
+            groups.append(g)
+
+    tspec = S.top_spec()
+    buckets = {}
+    for path, shape in top_sig:
+        in_e, out_e = tspec[path]
+        vec = len(shape) == 1
+        key = (shape, _expr_key(in_e) if not vec else None,
+               _expr_key(out_e), vec)
+        buckets.setdefault(key, []).append((path, in_e, out_e))
+    for (shape, _ik, _ok, vec), members in sorted(buckets.items(), key=str):
+        paths = tuple(p for p, _, _ in members)
+        in_e, out_e = members[0][1], members[0][2]
+        g = _plan_group("", False, paths, shape, None if vec else in_e,
+                        out_e, vec, 0, cfg1, cfg2)
+        if not vec:
+            register(in_e, "in")
+        register(out_e, "out")
+        groups.append(g)
+
+    return GrowthPlan(cfg1, cfg2, tuple(groups), exprs)
+
+
+def plan_for(cfg1: ModelConfig, cfg2: ModelConfig, small) -> GrowthPlan:
+    """The (memoised) GrowthPlan for growing ``small`` from cfg1 to cfg2."""
+    return _build_plan(cfg1, cfg2, _tree_signature(small))

@@ -17,15 +17,14 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def current_mesh() -> Optional[Mesh]:
     try:
-        m = jax.sharding.get_abstract_mesh()
+        return compat.get_mesh()
     except Exception:
         return None
-    if m is None or getattr(m, "empty", True):
-        return None
-    return m
 
 
 def physical_spec(spec: P, mesh) -> P:

@@ -1,6 +1,8 @@
 from repro.kernels.ops import (flash_attention, flash_attention_ref,
                                ligo_blend_expand, ligo_blend_expand_ref,
-                               ligo_grow, ligo_grow_ref)
+                               ligo_blend_expand_vjp, ligo_grow,
+                               ligo_grow_ref)
 
 __all__ = ["flash_attention", "flash_attention_ref", "ligo_blend_expand",
-           "ligo_blend_expand_ref", "ligo_grow", "ligo_grow_ref"]
+           "ligo_blend_expand_ref", "ligo_blend_expand_vjp", "ligo_grow",
+           "ligo_grow_ref"]

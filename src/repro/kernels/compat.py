@@ -1,0 +1,21 @@
+"""Version shims for the Pallas TPU API across jax releases.
+
+jax renamed ``pltpu.TPUCompilerParams`` (≤ 0.4.x) to ``pltpu.CompilerParams``
+(newer releases). Kernels import :func:`tpu_compiler_params` instead of
+touching either name directly so the same source compiles everywhere.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the TPU compiler-params struct under whichever name jax exports.
+
+    Accepts the keyword args shared by both APIs (``dimension_semantics``,
+    ``vmem_limit_bytes``, ...).
+    """
+    return _COMPILER_PARAMS_CLS(**kwargs)

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _kernel(w_ref, b_ref, W_ref, out_ref, acc_ref, *, n_a: int, L1: int):
     a = pl.program_id(3)
@@ -79,7 +81,7 @@ def ligo_blend_expand(w: jax.Array, B: jax.Array, W: jax.Array, *,
         out_specs=pl.BlockSpec((1, ti, tb), lambda l2, i, b, a: (l2, i, b)),
         out_shape=jax.ShapeDtypeStruct((L2, D2o, D1i), B.dtype),
         scratch_shapes=[pltpu.VMEM((ti, tb), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -4,6 +4,13 @@ On CPU (this container) the kernels execute with ``interpret=True`` — the
 kernel body runs step-by-step in Python against the same BlockSpec tiling, so
 correctness (incl. the grid/accumulator logic) is what's validated; on TPU the
 same calls compile to Mosaic. ``backend()`` picks automatically.
+
+``ligo_blend_expand_vjp`` is the differentiable entry point used by the
+GrowthPlan engine (:mod:`repro.core.plan`): a ``jax.custom_vjp`` around the
+fused depth-blend + width-expand primitive whose backward pass is expressed
+with the *same* fused contraction (``dW = blend_expand(wᵀ, Bᵀ, dP)``) plus
+small-space einsums — the widened ``(L1, D2o, ...)`` intermediate stack is
+never materialised in either direction.
 """
 from __future__ import annotations
 
@@ -34,6 +41,64 @@ def ligo_grow(w, B, A, W, **kw):
     """
     P = ligo_blend_expand(w, B, W, **kw)
     return jnp.einsum("kib,jb->kij", P, A)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable fused blend-expand (custom_vjp)
+# ---------------------------------------------------------------------------
+def _blend_expand_impl(w, B, W, use_kernel: bool):
+    if use_kernel:
+        return _blend_expand(w, B, W, interpret=_interpret())
+    return ref.ligo_blend_expand_ref(w, B, W)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _blend_expand_vjp(use_kernel: bool, w, B, W):
+    return _blend_expand_impl(w, B, W, use_kernel)
+
+
+def _blend_expand_fwd(use_kernel, w, B, W):
+    return _blend_expand_impl(w, B, W, use_kernel), (w, B, W)
+
+
+def _blend_expand_bwd(use_kernel, res, dP):
+    """Transpose of P[k] = B (Σ_l w[k,l] W[l]) without widened intermediates.
+
+    - dW[l] = Bᵀ (Σ_k w[k,l] dP[k])  — the same fused contraction with
+      (wᵀ, Bᵀ, dP); on TPU this is a second launch of the forward kernel.
+    - dB   = Σ_k dP[k] · blendedᵀ[k] with blended = w·W in the *small* space.
+    - dw[k,l] = ⟨dP[k], B W[l]⟩ contracted through Bᵀ dP (small space) so the
+      (L1, D2o, D1i) stack never exists.
+    """
+    w, B, W = res
+    dP32 = dP.astype(jnp.float32)
+    if use_kernel:
+        dW = _blend_expand(w.T, B.T.astype(dP.dtype), dP,
+                           interpret=_interpret())
+    else:
+        dW = ref.ligo_blend_expand_ref(w.T, B.T.astype(dP.dtype), dP)
+    tmp = jnp.einsum("kib,ia->kab", dP32, B.astype(jnp.float32))
+    blended = jnp.einsum("kl,lab->kab", w.astype(jnp.float32),
+                         W.astype(jnp.float32))
+    dB = jnp.einsum("kib,kab->ia", dP32, blended).astype(B.dtype)
+    dw = jnp.einsum("kab,lab->kl", tmp,
+                    W.astype(jnp.float32)).astype(w.dtype)
+    return dw, dB, dW.astype(W.dtype)
+
+
+_blend_expand_vjp.defvjp(_blend_expand_fwd, _blend_expand_bwd)
+
+
+def ligo_blend_expand_vjp(w, B, W, *, use_kernel=None):
+    """Differentiable fused ``P[l2] = B @ (Σ_l w[l2,l] W[l])``.
+
+    ``use_kernel=None`` picks the Pallas kernel on TPU and the einsum
+    reference elsewhere; either way gradients flow through the custom VJP
+    above (identical contractions, no widened intermediate stack).
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    return _blend_expand_vjp(bool(use_kernel), w, B, W)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, **kw):

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_config
+from repro import compat
 from repro.data import gen_tokens
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.model import decode_step, init_params, prefill
@@ -42,7 +43,7 @@ def main():
     mesh = (make_host_mesh() if args.mesh == "host"
             else make_production_mesh(multi_pod=(args.mesh == "multi")))
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params = init_params(cfg, jax.random.PRNGKey(0))
         prompts = jnp.asarray(
             gen_tokens(0, 0, args.batch, args.prompt_len, cfg.vocab_size)

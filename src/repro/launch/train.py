@@ -24,6 +24,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import (TrainConfig, get_config, half_config, smoke_config)
+from repro import compat
 from repro.core import grow
 from repro.data import GlobalBatchLoader
 from repro.distributed.sharding import (batch_specs, named_shardings,
@@ -85,7 +86,7 @@ def main():
     dp_sz = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
     act_spec = P("data", "model", None) if args.seq_shard else None
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         # ---- source model ------------------------------------------------
         if args.grow_from:
             small_cfg = (half_config(cfg) if args.grow_from == "half"
