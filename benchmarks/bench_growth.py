@@ -11,9 +11,15 @@ tab1  — downstream transfer: finetune grown-vs-scratch models on a shifted
 engine_bench — the GrowthPlan engine vs the legacy per-leaf einsum walk:
 ``apply_ligo`` (plan-compiled vs legacy eager — the exact pre-plan ``grow()``
 hot path — vs legacy jitted) on the real BERT-Small→Base pair and the proxy
-pair, plus a ``train_ligo`` step (scan phase vs per-step jit loop). Emits
-``BENCH_growth.json`` (name, wall-time, est. HBM bytes) at the repo root so
-future PRs have a perf trajectory.
+pair, plus backward-pass (grad-of-apply) entries — the LiGO phase
+differentiates through ``apply_ligo`` on every SGD step, so the train-time
+hot loop is the backward, not the forward: wall times for ``jax.grad`` of
+the legacy and plan engines, and accounted HBM bytes for the einsum backward
+formulation vs the fused multi-cotangent Pallas backward kernel (one pass
+over the dP tiles, small-space partial reductions). Plus a ``train_ligo``
+step (scan phase vs per-step jit loop). Emits ``BENCH_growth.json`` (name,
+wall-time, est. HBM bytes) at the repo root so future PRs have a perf
+trajectory.
 """
 from __future__ import annotations
 
@@ -242,6 +248,94 @@ def _est_apply_hbm(plan, small, big, ligo, *, mode: str) -> int:
     return int(total)
 
 
+def _est_grad_hbm(plan, small, big, ligo, *, mode: str) -> int:
+    """HBM-traffic estimate for one backward pass through ``plan.apply`` —
+    the LiGO phase's train-time hot loop (differentiated every SGD step).
+
+    mode="einsum" — the XLA einsum backward formulation (the CPU path and
+    the pre-PR TPU path): per kernel-eligible group the three cotangent
+    contractions re-read ``dP`` twice and ``W`` twice and materialise the
+    small-space ``T``/``blended`` stacks in HBM.
+
+    mode="fused"  — the fused multi-cotangent Pallas backward kernel: one
+    pass over the ``dP`` tiles; ``dP``/``W``/``B`` stream once, ``dB``/``dw``
+    leave the kernel as small partials (``(n_b, I, A)`` and
+    ``(n_a, n_b, N, L2, L1)``) reduced in the small space.
+
+    Non-eligible groups get the same generic 2× forward-intermediate estimate
+    in both modes, so the fused-vs-einsum delta isolates the kernel's win.
+    """
+    from repro.core.ligo import _kind_counts
+    from repro.core.plan import _expr_dims
+    from repro.kernels.ligo_expand import fused_tiles
+    itemsize = 4
+    c1, c2 = plan.cfg1, plan.cfg2
+    # params in, output cotangent in, ligo params in + their gradients out
+    total = (_tree_bytes(small) + _tree_bytes(big)
+             + 2 * _tree_bytes(ligo))
+    for g in plan.groups:
+        L1 = g.shape[0] if g.stacked else 1
+        L2 = _kind_counts(c2).get(g.kind, 0) if g.stacked else 0
+        G = len(g.paths)
+        if g.vec:
+            dims = {"l": L1, "n": g.shape[-1]}
+            j = (_expr_dims(plan.exprs[g.out_ref], c1, c2)[0]
+                 if g.out_ref else dims["n"])
+            inter = 0
+            for op in g.order:
+                if op == "out":
+                    dims["n"] = j
+                else:
+                    dims["l"] = L2
+                inter += dims["l"] * dims["n"]
+            total += G * inter * itemsize * 4       # fwd inter ×2 in the bwd
+            continue
+        extra = 1
+        for d in g.shape[(1 if g.stacked else 0):-2]:
+            extra *= d
+        a, b = g.shape[-2], g.shape[-1]
+        i = (_expr_dims(plan.exprs[g.in_ref], c1, c2)[0]
+             if g.in_ref else a)
+        j = (_expr_dims(plan.exprs[g.out_ref], c1, c2)[0]
+             if g.out_ref else b)
+        if g.kernel_ok:
+            dP = G * L2 * extra * i * b             # custom_vjp cotangent
+            W = G * L1 * extra * a * b
+            B = i * a
+            # right-expansion backward is identical in both modes
+            shared = (G * L2 * extra * (i * j + 2 * i * b) + j * b)
+            if mode == "fused":
+                _, tb = fused_tiles(i, b)
+                n_b = -(-b // tb)
+                N = G * extra
+                inter = (dP + W + 3 * B + W           # dP/W stream once; B is
+                                                      # copied zero-padded into
+                                                      # VMEM-resident form;
+                                                      # dW out == |W|
+                         + 2 * n_b * i * a + i * a    # dB partial + reduce
+                         + 2 * n_b * N * L2 * L1
+                         + G * L2 * L1)               # dw partial + reduce
+            else:
+                T = G * L2 * extra * a * b
+                inter = (2 * dP + 2 * W + B + 3 * T   # T written, read twice
+                         + 2 * T                      # blended write+read
+                         + W + i * a + G * L2 * L1)   # dW, dB, dw out
+            total += (shared + inter) * itemsize
+            continue
+        l, ca, cb = L1, a, b
+        inter = 0
+        for op in g.order:
+            if op == "in":
+                ca = i
+            elif op == "out":
+                cb = j
+            else:
+                l = L2
+            inter += l * extra * ca * cb
+        total += G * inter * itemsize * 4           # generic: 2× fwd traffic
+    return int(total)
+
+
 def _bench_apply_pair(name: str, c1, c2, iters: int, entries: List[Dict],
                       speedups: Dict) -> None:
     from repro.core import apply_ligo, init_ligo_params, plan_for
@@ -261,9 +355,24 @@ def _bench_apply_pair(name: str, c1, c2, iters: int, entries: List[Dict],
     legacy_eager, legacy_jit, plan_ms = (ms["legacy_eager"], ms["legacy_jit"],
                                          ms["plan"])
 
+    # backward pass — the LiGO-phase hot loop (grad of apply w.r.t. ligo)
+    def _sq(tree):
+        return sum(jnp.sum(x * x) for x in jax.tree.leaves(tree))
+
+    g_leg = jax.jit(jax.grad(
+        lambda l: _sq(apply_ligo(l, sp, c1, c2, engine="legacy"))))
+    g_plan = jax.jit(jax.grad(
+        lambda l: _sq(plan.apply(l, sp, use_kernel=False))))
+    gms = _median_ms_interleaved({
+        "legacy_jit": lambda: g_leg(lg),
+        "plan": lambda: g_plan(lg),
+    }, iters)
+
     hbm_legacy = _est_apply_hbm(plan, sp, big, lg, mode="legacy")
     hbm_plan = _est_apply_hbm(plan, sp, big, lg, mode="plan")
     hbm_fused = _est_apply_hbm(plan, sp, big, lg, mode="plan_fused")
+    hbm_grad_einsum = _est_grad_hbm(plan, sp, big, lg, mode="einsum")
+    hbm_grad_fused = _est_grad_hbm(plan, sp, big, lg, mode="fused")
     entries.extend([
         {"name": f"apply_ligo[{name}]/legacy_eager", "wall_ms":
          round(legacy_eager, 3), "est_hbm_bytes": hbm_legacy,
@@ -280,11 +389,28 @@ def _bench_apply_pair(name: str, c1, c2, iters: int, entries: List[Dict],
          "est_hbm_bytes": hbm_fused,
          "note": "fused Pallas blend-expand path (TPU); wall-time excluded "
                  "on CPU — interpret mode is not a timing target"},
+        {"name": f"grad_apply_ligo[{name}]/legacy_jit",
+         "wall_ms": round(gms["legacy_jit"], 3),
+         "est_hbm_bytes": hbm_grad_einsum,
+         "note": "backward of the legacy walk under jit — the pre-plan "
+                 "LiGO-phase hot loop (einsum cotangent contractions)"},
+        {"name": f"grad_apply_ligo[{name}]/plan",
+         "wall_ms": round(gms["plan"], 3),
+         "est_hbm_bytes": hbm_grad_einsum,
+         "note": "backward of the plan engine (einsum bwd formulation: "
+                 "dP re-read per cotangent, T/blended stacks in HBM)"},
+        {"name": f"grad_apply_ligo[{name}]/plan_fused_bwd", "wall_ms": None,
+         "est_hbm_bytes": hbm_grad_fused,
+         "note": "fused multi-cotangent Pallas bwd kernel (TPU): one pass "
+                 "over dP tiles, dW/dB/dw together, small-space partial "
+                 "reductions; wall-time excluded on CPU"},
     ])
     speedups[name] = {
         "plan_vs_legacy": round(legacy_eager / plan_ms, 3),
         "plan_vs_legacy_jit": round(legacy_jit / plan_ms, 3),
         "fused_vs_legacy_est_hbm": round(hbm_legacy / hbm_fused, 3),
+        "fused_bwd_vs_einsum_bwd_est_hbm":
+            round(hbm_grad_einsum / hbm_grad_fused, 3),
     }
 
 
@@ -395,5 +521,8 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="output json path (default: BENCH_growth.json at "
+                         "the repo root)")
     args = ap.parse_args()
-    engine_bench(quick=args.quick)
+    engine_bench(quick=args.quick, out_path=args.out)

@@ -16,10 +16,31 @@ and fixes, ahead of time:
    instead of per-leaf einsums;
 3. a static, FLOP-cost-model choice of contraction order per group
    (expand-then-blend vs blend-then-expand), and whether the group is
-   eligible for the fused Pallas ``ligo_blend_expand`` kernel
-   (:func:`repro.kernels.ligo_blend_expand_vjp`, a ``jax.custom_vjp`` whose
-   backward pass re-uses the fused kernel) — on TPU the widened
-   ``(L1, D2o, D2i)`` stack then never exists in HBM, forward or backward.
+   eligible for the fused Pallas blend-expand path
+   (:func:`repro.kernels.ligo_blend_expand_grouped_vjp`, a ``jax.custom_vjp``
+   over the *whole group*) — on TPU the widened ``(L1, D2o, D2i)`` stack then
+   never exists in HBM, forward or backward.
+
+Fused-path coverage and backward dataflow
+-----------------------------------------
+Kernel eligibility (``LeafGroup.kernel_ok``) is decided by
+:func:`repro.kernels.fused_eligible` and is *universal* in shape: any stacked
+``(L1, a, b)`` or MoE ``(L1, E, a, b)`` leaf with an in-expander qualifies —
+the group dim G and expert dim E fold into the kernel grid (one launch per
+group, not per leaf) and non-128-aligned dims run on cdiv grids with
+in-kernel zero-masked ragged tiles, so vocab-projection-sized and odd-head
+shapes are no longer rejected. The only exclusions are degenerate dims and
+groups whose backward-kernel scratch accumulators would overflow the VMEM
+budget (see :func:`repro.kernels.fused_vmem_bytes`).
+
+The backward pass — the LiGO phase's hot loop, differentiated on every SGD
+step — is a *single* fused Pallas pass over the ``dP`` tiles
+(:func:`repro.kernels.ligo_blend_expand_bwd_fused`) that emits all three
+cotangents together: ``dW = Bᵀ(Σ_k w[k,l] dP[k])`` accumulated per-tile,
+and ``dB``/``dw`` accumulated in *small-space* VMEM scratch with tiny
+``(n_b, I, A)`` / ``(n_b, N, L2, L1)`` partials reduced outside — so
+``dP``/``W``/``B`` each move between HBM and VMEM exactly once per launch
+and no widened ``(L1, D2o, ·)`` intermediate exists in either direction.
 
 ``plan_for(cfg1, cfg2, small)`` memoises plans; ``plan.executor()`` memoises
 one jitted callable per plan, so eager callers (``grow()``'s final
@@ -43,7 +64,7 @@ from repro.configs.base import ModelConfig
 from repro.core import spec as S
 from repro.core.ligo import (_flatten, _kind_counts, _unflatten,
                              resolve_expander)
-from repro.kernels.ops import ligo_blend_expand_vjp
+from repro.kernels.ops import fused_eligible, ligo_blend_expand_grouped_vjp
 
 # Trace-time instrumentation (tests assert expanders are resolved once per
 # apply-trace, not once per leaf, and that train_ligo never re-traces).
@@ -89,11 +110,6 @@ class LeafGroup:
     vec: bool                      # per-layer vector leaf (out-expander only)
     order: Tuple[str, ...]         # op sequence drawn from {in, out, blend}
     kernel_ok: bool                # fused Pallas custom_vjp path eligible
-
-
-def _kernel_dim_ok(d: int) -> bool:
-    """128-tileable: one tile (≤128, sublane-aligned) or a multiple of 128."""
-    return (d <= 128 and d % 8 == 0) or d % 128 == 0
 
 
 def _best_order(ops_present, L1: int, L2: int, extra: int, a: int, b: int,
@@ -150,8 +166,11 @@ def _plan_group(kind: str, stacked: bool, paths, shape, in_e, out_e,
                                          ("out", out_e is not None),
                                          ("blend", blended)) if c)
     order = _best_order(ops_present, L1, L2, extra, a, b, i, j)
-    kernel_ok = (blended and in_e is not None and len(shape) == 3
-                 and all(_kernel_dim_ok(d) for d in (i, a, b)))
+    # Fused Pallas eligibility: stacked (L1, a, b) or MoE (L1, E, a, b) with
+    # an in-expander — G/E fold into the grid, ragged dims are masked
+    # in-kernel, so only the VMEM scratch budget can reject a real shape.
+    kernel_ok = (blended and in_e is not None and len(shape) in (3, 4)
+                 and fused_eligible(L1, L2, extra, i, a, b))
     return LeafGroup(kind, stacked, tuple(paths), tuple(shape), in_ref,
                      out_ref, False, order, kernel_ok)
 
@@ -221,19 +240,22 @@ class GrowthPlan:
         return X
 
     @staticmethod
-    def _run_group_fused(g: LeafGroup, leaves, E_in, E_out, w_g):
-        """Fused Pallas path: blend + left-expand per leaf via the custom_vjp
-        kernel (the widened (L1, D2o, ·) stack never hits HBM), right-expand
-        as a plain matmul. Unrolled over the (small) group — each member is
-        one kernel launch."""
-        outs = []
-        for gi, W in enumerate(leaves):
-            P = ligo_blend_expand_vjp(w_g[gi], E_in.astype(W.dtype), W,
-                                      use_kernel=True)
-            if E_out is not None:
-                P = jnp.einsum("kab,jb->kaj", P, E_out.astype(P.dtype))
-            outs.append(P)
-        return jnp.stack(outs)
+    def _run_group_fused(g: LeafGroup, X, E_in, E_out, w_g):
+        """Fused Pallas path: blend + left-expand for the *whole group* via
+        the grouped custom_vjp kernel — the G leaves and any MoE expert dim E
+        fold into the kernel grid, so the group is ONE launch forward and ONE
+        fused multi-cotangent launch backward (the widened (L1, D2o, ·) stack
+        never hits HBM in either direction). The right expansion is a plain
+        (already-optimal) matmul on the kernel's output."""
+        moe = X.ndim == 5                      # (G, L1, E, a, b) expert stack
+        Xg = X if moe else X[:, :, None]       # insert E=1 for plain leaves
+        P = ligo_blend_expand_grouped_vjp(w_g, E_in.astype(X.dtype), Xg,
+                                          use_kernel=True)
+        if not moe:
+            P = P[:, :, 0]
+        if E_out is not None:
+            P = GrowthPlan._expand_out(P, E_out)
+        return P
 
     def apply(self, ligo, small, *, use_kernel: Optional[bool] = None):
         """Θ_large = M(Θ_small) — plan-driven, differentiable in both args."""
@@ -259,10 +281,10 @@ class GrowthPlan:
                    if blend_tree is not None else None)
             E_in = table[g.in_ref] if g.in_ref is not None else None
             E_out = table[g.out_ref] if g.out_ref is not None else None
+            X = leaves[0][None] if len(leaves) == 1 else jnp.stack(leaves)
             if use_kernel and g.kernel_ok and w_g is not None:
-                out = self._run_group_fused(g, leaves, E_in, E_out, w_g)
+                out = self._run_group_fused(g, X, E_in, E_out, w_g)
             else:
-                X = leaves[0][None] if len(leaves) == 1 else jnp.stack(leaves)
                 out = self._run_group(g, X, E_in, E_out, w_g)
             dst = grown_stacks[g.kind] if g.kind else grown_top
             for gi, p in enumerate(g.paths):

@@ -1,8 +1,17 @@
-from repro.kernels.ops import (flash_attention, flash_attention_ref,
-                               ligo_blend_expand, ligo_blend_expand_ref,
-                               ligo_blend_expand_vjp, ligo_grow,
-                               ligo_grow_ref)
+from repro.kernels.ops import (LAUNCH_COUNTS, flash_attention,
+                               flash_attention_ref, fused_eligible,
+                               fused_vmem_bytes, ligo_blend_expand,
+                               ligo_blend_expand_bwd_fused,
+                               ligo_blend_expand_bwd_ref,
+                               ligo_blend_expand_grouped,
+                               ligo_blend_expand_grouped_ref,
+                               ligo_blend_expand_grouped_vjp,
+                               ligo_blend_expand_ref, ligo_blend_expand_vjp,
+                               ligo_grow, ligo_grow_ref)
 
-__all__ = ["flash_attention", "flash_attention_ref", "ligo_blend_expand",
-           "ligo_blend_expand_ref", "ligo_blend_expand_vjp", "ligo_grow",
-           "ligo_grow_ref"]
+__all__ = ["LAUNCH_COUNTS", "flash_attention", "flash_attention_ref",
+           "fused_eligible", "fused_vmem_bytes", "ligo_blend_expand",
+           "ligo_blend_expand_bwd_fused", "ligo_blend_expand_bwd_ref",
+           "ligo_blend_expand_grouped", "ligo_blend_expand_grouped_ref",
+           "ligo_blend_expand_grouped_vjp", "ligo_blend_expand_ref",
+           "ligo_blend_expand_vjp", "ligo_grow", "ligo_grow_ref"]

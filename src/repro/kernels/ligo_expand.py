@@ -1,21 +1,37 @@
-"""Pallas TPU kernel: fused LiGO depth-blend + width-expansion.
+"""Pallas TPU kernel: fused LiGO depth-blend + width-expansion (forward).
 
-Computes ``P[l2] = B @ (Σ_l w[l2, l] · W[l])`` — the growth hot-spot. The
-torch reference implementation materialises the widened stack (L1, D2, D2) in
-HBM and then blends along depth; on TPU we exploit that the blend commutes
-with the (layer-independent) width expansion and fuse the blend into the
-matmul's rhs operand load:
+Computes ``P[g, l2, e] = B @ (Σ_l w[g, l2, l] · W[g, l, e])`` — the growth
+hot-spot. The torch reference implementation materialises the widened stack
+(L1, D2, D2) in HBM and then blends along depth; on TPU we exploit that the
+blend commutes with the (layer-independent) width expansion and fuse the
+blend into the matmul's rhs operand:
 
-- grid ``(L2, i, b, a)`` over output-row tiles × small-dim tiles, the ``a``
-  (contraction) dimension innermost with an accumulating output block;
-- per grid step the kernel loads the (L1, TA, TB) slab of the *small* weight
-  stack into VMEM, blends it with the ``w[l2]`` row (a vector FMA, VPU work
-  overlapped with the MXU matmul), and feeds the blended (TA, TB) tile
-  straight to the MXU — the blended stack never exists in HBM.
+- grid ``(b, n, l2, i)`` with ``n = g·E + e`` — the *leaf-group* dim G (same
+  shape + expander pair leaves batched by the GrowthPlan) and the MoE expert
+  dim E are folded into the grid, so a whole group of 4-D ``(L1, E, a, b)``
+  expert stacks executes as **one** kernel launch;
+- the expander ``B`` is held in VMEM whole (rows zero-padded to the i-tile
+  outside the kernel — real zeros, so no masking is ever needed) and the
+  small-dim extent A rides inside each block, which removes the ``a`` grid
+  dim: every operand's block index changes on every revisit-run boundary, so
+  **W, B and the output each move between HBM and VMEM exactly once per
+  launch** — the blended stack never exists in HBM and nothing is re-fetched;
+- per grid step the kernel blends the (L1, A, TB) slab of the *small* weight
+  stack with the ``w[g, l2]`` row once per (b, n, l2) (a vector FMA, VPU work
+  overlapped with the MXU matmul) and contracts the full-A tile
+  ``B[i·TI:, :] @ blended`` straight on the MXU;
+- non-128-aligned dims need no special casing: dims ≤ 128 are a single
+  block, the ragged last i/b tiles are handled by Pallas' block padding
+  (garbage only ever lands in out-of-range output rows/cols, which the store
+  masks), and A is always exact in-block.
 
-HBM traffic: L2·(D1o·D1i)·(D2o/TI) reads of W + output writes, vs the naive
-order's extra L1·D2o·D2i intermediate write+read. Tiles are 128-aligned for
-the MXU. Validated in interpret mode against ref.ligo_blend_expand_ref.
+Eligibility is therefore not an alignment question: any ``(L1[, E], a, b)``
+stacked leaf with an in-expander qualifies, bounded only by the VMEM budget
+(:func:`fused_vmem_bytes` — the backward kernel's resident ``B``/``dB``
+accumulators are the binding constraint, see
+:mod:`repro.kernels.ligo_expand_bwd`).
+
+Validated in interpret mode against ref.ligo_blend_expand_grouped_ref.
 """
 from __future__ import annotations
 
@@ -29,60 +45,123 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.compat import tpu_compiler_params
 
 
-def _kernel(w_ref, b_ref, W_ref, out_ref, acc_ref, *, n_a: int, L1: int):
-    a = pl.program_id(3)
+def _pick_tile(d: int, cap: int) -> int:
+    """One full block for small dims (no padding), cap-tiles above."""
+    return d if d <= cap else cap
 
-    @pl.when(a == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # blend the small stack slab with this l2's depth weights: (TA, TB)
-    w_row = w_ref[0]                                     # (L1,)
-    slab = W_ref[...]                                    # (L1, TA, TB)
-    blended = jax.lax.dot_general(
-        w_row[None, :], slab.reshape(L1, -1),
-        (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    ).reshape(slab.shape[1], slab.shape[2])
-    # expand: (TI, TA) @ (TA, TB) -> (TI, TB)
-    acc_ref[...] += jax.lax.dot(
-        b_ref[...].astype(jnp.float32), blended,
-        preferred_element_type=jnp.float32)
+def _pad_rows(x: jax.Array, rows: int) -> jax.Array:
+    """Zero-pad dim 0 of ``x`` up to ``rows`` (real zeros — contraction-safe)."""
+    if x.shape[0] == rows:
+        return x
+    return jnp.pad(x, ((0, rows - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
 
-    @pl.when(a == n_a - 1)
-    def _flush():
-        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+
+def fused_tiles(i: int, b: int, *, ti: int = 128, tb: int = 128):
+    """Effective (TI, TB) tile sizes for the fused fwd/bwd kernels (the A
+    extent always rides whole inside each block)."""
+    return _pick_tile(i, ti), _pick_tile(b, tb)
+
+
+def fused_vmem_bytes(L1: int, i: int, a: int, b: int) -> int:
+    """Worst-case VMEM residency (bytes) of the fwd/bwd kernels for one grid
+    step: resident operand blocks + f32 scratch accumulators. The bwd kernel
+    dominates — it holds the padded expander B, the full (I, A) dB
+    accumulator and the (L1, A, TB) dW accumulator in VMEM."""
+    ti, tb = fused_tiles(i, b)
+    i_pad = -(-i // ti) * ti
+    fwd = (i_pad * a + L1 * a * tb + a * tb + ti * tb) * 4
+    bwd = (2 * i_pad * a + i * a + 3 * L1 * a * tb + 2 * a * tb
+           + ti * tb) * 4
+    return max(fwd, bwd)
+
+
+def fused_eligible(L1: int, L2: int, E: int, i: int, a: int, b: int, *,
+                   vmem_budget: int = 10 * 2 ** 20) -> bool:
+    """Can (L1[, E], a, b) stacked leaves run on the fused fwd+bwd kernels?
+
+    Universal in shape — G and E fold into the grid, ragged dims are handled
+    by block padding / pre-padded zeros — so the only rejections are
+    degenerate dims and shapes whose resident VMEM state would overflow.
+    """
+    if min(L1, L2, E, i, a, b) < 1:
+        return False
+    return fused_vmem_bytes(L1, i, a, b) <= vmem_budget
+
+
+def _kernel(w_ref, b_ref, W_ref, out_ref, bl_ref, *, L1: int, ti: int):
+    i = pl.program_id(3)
+
+    @pl.when(i == 0)
+    def _blend():
+        # blend the small stack slab for this (g, l2): (A, TB) — once per
+        # (b, n, l2), VPU work overlapped with the MXU contraction below
+        w_row = w_ref[0, 0]                              # (L1,)
+        slab = W_ref[0, :, 0]                            # (L1, A, TB)
+        bl_ref[...] = jax.lax.dot_general(
+            w_row[None, :], slab.reshape(L1, -1),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).reshape(bl_ref.shape)
+
+    # expand: (TI, A) @ (A, TB) -> (TI, TB); B rows are pre-padded zeros, so
+    # the slice is always in-bounds and ragged-i rows contract to zero
+    Bsl = b_ref[pl.ds(i * ti, ti), :]
+    out_ref[0, 0, 0] = jax.lax.dot(
+        Bsl.astype(jnp.float32), bl_ref[...],
+        preferred_element_type=jnp.float32).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("ti", "ta", "tb", "interpret"))
-def ligo_blend_expand(w: jax.Array, B: jax.Array, W: jax.Array, *,
-                      ti: int = 128, ta: int = 128, tb: int = 128,
-                      interpret: bool = False) -> jax.Array:
-    """w: (L2, L1); B: (D2o, D1o); W: (L1, D1o, D1i) → (L2, D2o, D1i)."""
-    L2, L1 = w.shape
-    D2o, D1o = B.shape
-    _, _, D1i = W.shape
-    assert W.shape[0] == L1 and W.shape[1] == D1o
-    ti, ta, tb = min(ti, D2o), min(ta, D1o), min(tb, D1i)
-    assert D2o % ti == 0 and D1o % ta == 0 and D1i % tb == 0, \
-        (D2o, ti, D1o, ta, D1i, tb)
-    n_i, n_a, n_b = D2o // ti, D1o // ta, D1i // tb
+def ligo_blend_expand_grouped(w: jax.Array, B: jax.Array, W: jax.Array, *,
+                              ti: int = 128, ta: int = 128, tb: int = 128,
+                              interpret: bool = False) -> jax.Array:
+    """w: (G, L2, L1); B: (I, A); W: (G, L1, E, A, Bd) → (G, L2, E, I, Bd).
 
-    grid = (L2, n_i, n_b, n_a)
-    kernel = functools.partial(_kernel, n_a=n_a, L1=L1)
+    One launch for a whole leaf group: G same-shape leaves sharing one
+    in-expander, each leaf an (L1, E, A, Bd) expert stack (E = 1 for plain
+    2-D-per-layer leaves). The MoE expert dim never broadcasts the blend —
+    ``w`` is per-leaf, shared across experts via the grid index map.
+    (``ta`` is accepted for API stability; the A extent is never tiled.)
+    """
+    del ta                                 # A always rides whole in-block
+    G, L2, L1 = w.shape
+    I, A = B.shape
+    G2, L1b, E, A2, Bd = W.shape
+    assert G2 == G and L1b == L1 and A2 == A, (w.shape, B.shape, W.shape)
+    ti, tb = fused_tiles(I, Bd, ti=ti, tb=tb)
+    n_i, n_b = pl.cdiv(I, ti), pl.cdiv(Bd, tb)
+    B_pad = _pad_rows(B, n_i * ti)
+
+    grid = (n_b, G * E, L2, n_i)
+    kernel = functools.partial(_kernel, L1=L1, ti=ti)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, L1), lambda l2, i, b, a: (l2, 0)),
-            pl.BlockSpec((ti, ta), lambda l2, i, b, a: (i, a)),
-            pl.BlockSpec((L1, ta, tb), lambda l2, i, b, a: (0, a, b)),
+            pl.BlockSpec((1, 1, L1), lambda b, n, k, i: (n // E, k, 0)),
+            pl.BlockSpec((n_i * ti, A), lambda b, n, k, i: (0, 0)),
+            pl.BlockSpec((1, L1, 1, A, tb),
+                         lambda b, n, k, i: (n // E, 0, n % E, 0, b)),
         ],
-        out_specs=pl.BlockSpec((1, ti, tb), lambda l2, i, b, a: (l2, i, b)),
-        out_shape=jax.ShapeDtypeStruct((L2, D2o, D1i), B.dtype),
-        scratch_shapes=[pltpu.VMEM((ti, tb), jnp.float32)],
+        out_specs=pl.BlockSpec((1, 1, 1, ti, tb),
+                               lambda b, n, k, i: (n // E, k, n % E, i, b)),
+        out_shape=jax.ShapeDtypeStruct((G, L2, E, I, Bd), B.dtype),
+        scratch_shapes=[pltpu.VMEM((A, tb), jnp.float32)],
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(w.astype(jnp.float32), B, W)
+    )(w.astype(jnp.float32), B_pad, W)
+
+
+def ligo_blend_expand(w: jax.Array, B: jax.Array, W: jax.Array, *,
+                      ti: int = 128, ta: int = 128, tb: int = 128,
+                      interpret: bool = False) -> jax.Array:
+    """w: (L2, L1); B: (D2o, D1o); W: (L1, D1o, D1i) → (L2, D2o, D1i).
+
+    Single-leaf convenience wrapper over the grouped kernel (G = E = 1).
+    """
+    out = ligo_blend_expand_grouped(w[None], B, W[None, :, None],
+                                    ti=ti, ta=ta, tb=tb, interpret=interpret)
+    return out[0, :, 0]

@@ -5,23 +5,43 @@ kernel body runs step-by-step in Python against the same BlockSpec tiling, so
 correctness (incl. the grid/accumulator logic) is what's validated; on TPU the
 same calls compile to Mosaic. ``backend()`` picks automatically.
 
-``ligo_blend_expand_vjp`` is the differentiable entry point used by the
-GrowthPlan engine (:mod:`repro.core.plan`): a ``jax.custom_vjp`` around the
-fused depth-blend + width-expand primitive whose backward pass is expressed
-with the *same* fused contraction (``dW = blend_expand(wᵀ, Bᵀ, dP)``) plus
-small-space einsums — the widened ``(L1, D2o, ...)`` intermediate stack is
-never materialised in either direction.
+``ligo_blend_expand_grouped_vjp`` is the differentiable entry point used by
+the GrowthPlan engine (:mod:`repro.core.plan`): a ``jax.custom_vjp`` around
+the fused depth-blend + width-expand primitive over a whole leaf group
+(G leaves × E experts folded into the kernel grid — one launch per group).
+Its backward pass is :func:`repro.kernels.ligo_expand_bwd.
+ligo_blend_expand_bwd_fused`, a single fused pass over the ``dP`` tiles that
+emits all three cotangents (dW, dB, dw) with small-space scratch accumulation
+— the widened ``(L1, D2o, ...)`` stack is never materialised in either
+direction, and ``dP``/``W``/``B`` each stream from HBM exactly once. On CPU
+(``use_kernel=False``) both directions fall back to the einsum formulation in
+:mod:`repro.kernels.ref`, which accumulates in float32 via
+``preferred_element_type`` while streaming operands at param dtype (no
+HBM-doubling upcast for bf16 trees).
+
+``LAUNCH_COUNTS`` is trace-time instrumentation: tests assert the plan engine
+issues one fused launch per leaf group (not per leaf) by tracing an apply and
+counting.
 """
 from __future__ import annotations
 
 import functools
+from collections import Counter
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
-from repro.kernels.ligo_expand import ligo_blend_expand as _blend_expand
+from repro.kernels.ligo_expand import (fused_eligible, fused_vmem_bytes,
+                                       ligo_blend_expand as _blend_expand,
+                                       ligo_blend_expand_grouped as
+                                       _blend_expand_grouped)
+from repro.kernels.ligo_expand_bwd import (ligo_blend_expand_bwd_fused as
+                                           _bwd_fused)
+
+# Trace-time fused-kernel launch counter ({"fwd": n, "bwd": n} per trace).
+LAUNCH_COUNTS: Counter = Counter()
 
 
 def _interpret() -> bool:
@@ -31,6 +51,16 @@ def _interpret() -> bool:
 def ligo_blend_expand(w, B, W, **kw):
     """P[l2] = B @ (Σ_l w[l2,l] W[l]) — fused depth-blend + left expansion."""
     return _blend_expand(w, B, W, interpret=_interpret(), **kw)
+
+
+def ligo_blend_expand_grouped(w, B, W, **kw):
+    """Grouped fused blend-expand: (G, L1, E, A, Bd) stacks, one launch."""
+    return _blend_expand_grouped(w, B, W, interpret=_interpret(), **kw)
+
+
+def ligo_blend_expand_bwd_fused(w, B, W, dP, **kw):
+    """Fused (dw, dB, dW) cotangents — one pass over the dP tiles."""
+    return _bwd_fused(w, B, W, dP, interpret=_interpret(), **kw)
 
 
 def ligo_grow(w, B, A, W, **kw):
@@ -44,61 +74,65 @@ def ligo_grow(w, B, A, W, **kw):
 
 
 # ---------------------------------------------------------------------------
-# Differentiable fused blend-expand (custom_vjp)
+# Differentiable fused grouped blend-expand (custom_vjp)
 # ---------------------------------------------------------------------------
-def _blend_expand_impl(w, B, W, use_kernel: bool):
+def _grouped_impl(w, B, W, use_kernel: bool):
     if use_kernel:
-        return _blend_expand(w, B, W, interpret=_interpret())
-    return ref.ligo_blend_expand_ref(w, B, W)
+        LAUNCH_COUNTS["fwd"] += 1
+        return _blend_expand_grouped(w, B, W, interpret=_interpret())
+    return ref.ligo_blend_expand_grouped_ref(w, B, W)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _blend_expand_vjp(use_kernel: bool, w, B, W):
-    return _blend_expand_impl(w, B, W, use_kernel)
+def _blend_expand_grouped_vjp(use_kernel: bool, w, B, W):
+    return _grouped_impl(w, B, W, use_kernel)
 
 
-def _blend_expand_fwd(use_kernel, w, B, W):
-    return _blend_expand_impl(w, B, W, use_kernel), (w, B, W)
+def _grouped_fwd(use_kernel, w, B, W):
+    return _grouped_impl(w, B, W, use_kernel), (w, B, W)
 
 
-def _blend_expand_bwd(use_kernel, res, dP):
-    """Transpose of P[k] = B (Σ_l w[k,l] W[l]) without widened intermediates.
+def _grouped_bwd(use_kernel, res, dP):
+    """All three cotangents of P[g,k,e] = B (Σ_l w[g,k,l] W[g,l,e]).
 
-    - dW[l] = Bᵀ (Σ_k w[k,l] dP[k])  — the same fused contraction with
-      (wᵀ, Bᵀ, dP); on TPU this is a second launch of the forward kernel.
-    - dB   = Σ_k dP[k] · blendedᵀ[k] with blended = w·W in the *small* space.
-    - dw[k,l] = ⟨dP[k], B W[l]⟩ contracted through Bᵀ dP (small space) so the
-      (L1, D2o, D1i) stack never exists.
+    On TPU: one fused Pallas pass over the dP tiles (dW, dB, dw emitted
+    together, small-space scratch accumulation). On CPU: the einsum oracle.
+    Either way no widened intermediate stack exists and operands stream at
+    param dtype with float32 accumulation.
     """
     w, B, W = res
-    dP32 = dP.astype(jnp.float32)
     if use_kernel:
-        dW = _blend_expand(w.T, B.T.astype(dP.dtype), dP,
-                           interpret=_interpret())
-    else:
-        dW = ref.ligo_blend_expand_ref(w.T, B.T.astype(dP.dtype), dP)
-    tmp = jnp.einsum("kib,ia->kab", dP32, B.astype(jnp.float32))
-    blended = jnp.einsum("kl,lab->kab", w.astype(jnp.float32),
-                         W.astype(jnp.float32))
-    dB = jnp.einsum("kib,kab->ia", dP32, blended).astype(B.dtype)
-    dw = jnp.einsum("kab,lab->kl", tmp,
-                    W.astype(jnp.float32)).astype(w.dtype)
-    return dw, dB, dW.astype(W.dtype)
+        LAUNCH_COUNTS["bwd"] += 1
+        return _bwd_fused(w, B, W, dP, interpret=_interpret())
+    return ref.ligo_blend_expand_bwd_ref(w, B, W, dP)
 
 
-_blend_expand_vjp.defvjp(_blend_expand_fwd, _blend_expand_bwd)
+_blend_expand_grouped_vjp.defvjp(_grouped_fwd, _grouped_bwd)
 
 
-def ligo_blend_expand_vjp(w, B, W, *, use_kernel=None):
-    """Differentiable fused ``P[l2] = B @ (Σ_l w[l2,l] W[l])``.
+def ligo_blend_expand_grouped_vjp(w, B, W, *, use_kernel=None):
+    """Differentiable grouped ``P[g,k,e] = B @ (Σ_l w[g,k,l] W[g,l,e])``.
 
-    ``use_kernel=None`` picks the Pallas kernel on TPU and the einsum
+    w: (G, L2, L1); B: (I, A); W: (G, L1, E, A, Bd) → (G, L2, E, I, Bd).
+    ``use_kernel=None`` picks the Pallas kernels on TPU and the einsum
     reference elsewhere; either way gradients flow through the custom VJP
     above (identical contractions, no widened intermediate stack).
     """
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
-    return _blend_expand_vjp(bool(use_kernel), w, B, W)
+    return _blend_expand_grouped_vjp(bool(use_kernel), w, B, W)
+
+
+def ligo_blend_expand_vjp(w, B, W, *, use_kernel=None):
+    """Differentiable fused ``P[l2] = B @ (Σ_l w[l2,l] W[l])``.
+
+    Single-leaf convenience wrapper over the grouped custom_vjp (G = E = 1).
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    out = _blend_expand_grouped_vjp(bool(use_kernel), w[None], B,
+                                    W[None, :, None])
+    return out[0, :, 0]
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, **kw):
@@ -107,7 +141,10 @@ def flash_attention(q, k, v, *, causal=True, window=0, **kw):
                   interpret=_interpret(), **kw)
 
 
-# re-exported oracles (benchmarks compare against these)
+# re-exported oracles (benchmarks compare against these); fused_eligible /
+# fused_vmem_bytes re-export directly via the import above
 ligo_blend_expand_ref = ref.ligo_blend_expand_ref
+ligo_blend_expand_grouped_ref = ref.ligo_blend_expand_grouped_ref
+ligo_blend_expand_bwd_ref = ref.ligo_blend_expand_bwd_ref
 ligo_grow_ref = ref.ligo_expand_full_ref
 flash_attention_ref = ref.flash_attention_ref

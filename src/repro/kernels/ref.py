@@ -18,6 +18,48 @@ def ligo_blend_expand_ref(w: jax.Array, B: jax.Array, W: jax.Array
     return jnp.einsum("ia,kab->kib", B, blended)
 
 
+def ligo_blend_expand_grouped_ref(w: jax.Array, B: jax.Array, W: jax.Array
+                                  ) -> jax.Array:
+    """Grouped oracle: P[g,k,e] = B @ (Σ_l w[g,k,l] · W[g,l,e]).
+
+    w: (G, L2, L1); B: (I, A); W: (G, L1, E, A, Bd) → (G, L2, E, I, Bd).
+    Accumulates in float32 (``preferred_element_type``) while streaming the
+    operands at their storage dtype — the CPU/interpret-mode ground truth for
+    the fused forward kernel.
+    """
+    blended = jnp.einsum("gkl,gleab->gkeab", w, W,
+                         preferred_element_type=jnp.float32)
+    return jnp.einsum("ia,gkeab->gkeib", B, blended,
+                      preferred_element_type=jnp.float32).astype(B.dtype)
+
+
+def ligo_blend_expand_bwd_ref(w: jax.Array, B: jax.Array, W: jax.Array,
+                              dP: jax.Array):
+    """Einsum oracle for the fused backward: transpose of the grouped
+    blend-expand without widened intermediates.
+
+    - T[g,k,e] = Bᵀ dP[g,k,e]          (small-space (A, Bd) stack)
+    - dW[g,l,e] = Σ_k w[g,k,l] T[g,k,e]
+    - dB = Σ_{g,k,e} dP[g,k,e] · blendedᵀ   (blended = w·W, small space)
+    - dw[g,k,l] = Σ_e ⟨T[g,k,e], W[g,l,e]⟩
+
+    All contractions accumulate in float32 via ``preferred_element_type`` but
+    stream ``dP``/``W`` at param dtype (no HBM-doubling upcast for bf16
+    trees). Returns (dw, dB, dW) cast to the operand dtypes.
+    """
+    f32 = jnp.float32
+    T = jnp.einsum("ia,gkeib->gkeab", B, dP, preferred_element_type=f32)
+    dW = jnp.einsum("gkl,gkeab->gleab", w, T,
+                    preferred_element_type=f32).astype(W.dtype)
+    blended = jnp.einsum("gkl,gleab->gkeab", w, W,
+                         preferred_element_type=f32)
+    dB = jnp.einsum("gkeib,gkeab->ia", dP, blended,
+                    preferred_element_type=f32).astype(B.dtype)
+    dw = jnp.einsum("gkeab,gleab->gkl", T, W,
+                    preferred_element_type=f32).astype(w.dtype)
+    return dw, dB, dW
+
+
 def ligo_expand_full_ref(w, B, A, W):
     """Full fused growth Ω[l2] = B (Σ_l w[l2,l] W_l) Aᵀ — oracle for ops."""
     P = ligo_blend_expand_ref(w, B, W)

@@ -3,6 +3,14 @@
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --smoke \\
         --batch 4 --prompt-len 64 --gen 32
 
+Growth-time elastic serving: ``--grow-to <arch>`` (or the shorthand ``2x``
+for a doubled-depth/1.5×-width target of the same family) hot-grows the
+loaded checkpoint at startup through the compiled GrowthPlan executor
+(:func:`repro.core.plan_for` — cached expanders, batched leaf groups, fused
+Pallas blend-expand on TPU), then serves the *grown* architecture. The plan
+executor is memoised, so repeated growth of the same (cfg1, cfg2) pair pays
+a single dispatch (~ms), cheap enough to run per serving process.
+
 On the production mesh, params are FSDP+TP sharded and the KV cache is
 sequence- or head-sharded per repro.distributed.sharding.state_pspecs; on CPU
 the same code runs on host devices at smoke scale.
@@ -16,11 +24,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, smoke_config
+from repro.configs import get_config, grow_target, smoke_config
 from repro import compat
 from repro.data import gen_tokens
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.model import decode_step, init_params, prefill
+
+
+def hot_grow(params, cfg, target: str, *, smoke: bool = False, seed: int = 1):
+    """Grow ``params`` (cfg) to the ``target`` architecture at startup.
+
+    ``target`` is a registry arch name (reduced via ``smoke_config`` when
+    serving in smoke mode) or ``"2x"`` for ``grow_target(cfg)``. Returns
+    ``(grown_params, cfg2)``. Uses the memoised GrowthPlan executor, so the
+    growth itself is one compiled dispatch after the first call.
+    """
+    from repro.core import init_ligo_params, plan_for
+    if target == "2x":
+        cfg2 = grow_target(cfg)
+    else:
+        cfg2 = get_config(target)
+        if smoke:
+            cfg2 = smoke_config(cfg2)
+    ligo = init_ligo_params(jax.random.PRNGKey(seed), cfg, cfg2)
+    t0 = time.perf_counter()
+    grown = plan_for(cfg, cfg2, params).executor()(ligo, params)
+    jax.block_until_ready(jax.tree.leaves(grown)[0])
+    print(f"[serve] hot-grew {cfg.name} -> {cfg2.name} "
+          f"({cfg.n_layers}L/{cfg.d_model}d -> {cfg2.n_layers}L/"
+          f"{cfg2.d_model}d) in {(time.perf_counter() - t0) * 1e3:.1f} ms")
+    return grown, cfg2
 
 
 def main():
@@ -33,6 +66,11 @@ def main():
     ap.add_argument("--mesh", default="host",
                     choices=["host", "single", "multi"])
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--grow-to", default=None, metavar="ARCH",
+                    help="hot-grow the checkpoint to this arch (or '2x' for "
+                         "a doubled-depth/1.5x-width same-family target) at "
+                         "startup via the cached GrowthPlan executor, then "
+                         "serve the grown model")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -45,6 +83,9 @@ def main():
 
     with compat.set_mesh(mesh):
         params = init_params(cfg, jax.random.PRNGKey(0))
+        if args.grow_to:
+            params, cfg = hot_grow(params, cfg, args.grow_to,
+                                   smoke=args.smoke)
         prompts = jnp.asarray(
             gen_tokens(0, 0, args.batch, args.prompt_len, cfg.vocab_size)
             [:, :args.prompt_len], jnp.int32)

@@ -2,10 +2,29 @@ import os
 import subprocess
 import sys
 
+import numpy as np
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
+
+
+def assert_trees_close_normalized(got, want, rel=1e-5, names=None):
+    """Per-leaf scale-normalized comparison: max |a-b| ≤ rel · max|want|.
+
+    Shared by the kernel-gradient and plan-gradient suites so tolerance /
+    normalization policy lives in one place.
+    """
+    import jax
+    leaves_g, leaves_w = jax.tree.leaves(got), jax.tree.leaves(want)
+    assert len(leaves_g) == len(leaves_w)
+    names = names or [""] * len(leaves_g)
+    for name, a, b in zip(names, leaves_g, leaves_w):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        scale = np.abs(b).max() + 1e-30
+        np.testing.assert_allclose(a / scale, b / scale, atol=rel,
+                                   err_msg=name)
 
 
 def run_in_subprocess(code: str, n_devices: int = 8, timeout: int = 600):

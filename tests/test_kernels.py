@@ -5,15 +5,21 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import assert_trees_close_normalized
 from repro.kernels import (flash_attention, flash_attention_ref,
-                           ligo_blend_expand, ligo_blend_expand_ref,
-                           ligo_grow, ligo_grow_ref)
+                           ligo_blend_expand, ligo_blend_expand_bwd_fused,
+                           ligo_blend_expand_bwd_ref,
+                           ligo_blend_expand_grouped,
+                           ligo_blend_expand_grouped_ref,
+                           ligo_blend_expand_ref, ligo_grow, ligo_grow_ref)
 
 LIGO_SHAPES = [
     (4, 2, 256, 128, 128),
     (12, 6, 384, 256, 512),
     (3, 3, 128, 128, 256),
     (2, 1, 128, 128, 128),
+    (4, 2, 100, 72, 90),        # non-128-aligned: masked ragged tiles
+    (3, 2, 200, 136, 130),      # ragged last tiles above 128
 ]
 
 
@@ -43,6 +49,49 @@ def test_ligo_blend_expand_tile_sweep():
         got = ligo_blend_expand(w, B, W, ti=ti, ta=ta, tb=tb)
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                    rtol=1e-5, atol=1e-5)
+
+
+# (G, L2, L1, E, I, A, Bd) — grouped/MoE stacks, aligned and ragged
+GROUPED_SHAPES = [
+    (2, 4, 2, 3, 100, 72, 90),     # MoE + fully non-aligned
+    (3, 5, 2, 4, 96, 64, 64),      # MoE expert stack, sub-128 dims
+    (2, 4, 2, 1, 256, 128, 128),   # plain group, MXU-aligned
+    (1, 2, 1, 1, 8, 8, 8),         # degenerate tiny dims
+]
+
+
+@pytest.mark.parametrize("shape", GROUPED_SHAPES)
+def test_ligo_blend_expand_grouped(shape):
+    """One launch for a (G leaves × E experts) group == grouped einsum."""
+    G, L2, L1, E, I, A, Bd = shape
+    rng = np.random.RandomState(0)
+    w = jnp.asarray(rng.randn(G, L2, L1), jnp.float32)
+    B = jnp.asarray(rng.randn(I, A) * 0.1, jnp.float32)
+    W = jnp.asarray(rng.randn(G, L1, E, A, Bd) * 0.1, jnp.float32)
+    got = ligo_blend_expand_grouped(w, B, W)
+    ref = ligo_blend_expand_grouped_ref(w, B, W)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", GROUPED_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ligo_blend_expand_bwd_fused(shape, dtype):
+    """The fused multi-cotangent backward kernel == the einsum oracle for
+    all three cotangents (dw, dB, dW), incl. ragged and MoE shapes."""
+    G, L2, L1, E, I, A, Bd = shape
+    rng = np.random.RandomState(1)
+    w = jnp.asarray(rng.randn(G, L2, L1), jnp.float32)
+    B = jnp.asarray(rng.randn(I, A) * 0.1, dtype)
+    W = jnp.asarray(rng.randn(G, L1, E, A, Bd) * 0.1, dtype)
+    dP = jnp.asarray(rng.randn(G, L2, E, I, Bd) * 0.1, dtype)
+    got = ligo_blend_expand_bwd_fused(w, B, W, dP)
+    ref = ligo_blend_expand_bwd_ref(w, B, W, dP)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    for gv, rv in zip(got, ref):
+        assert gv.dtype == rv.dtype
+    assert_trees_close_normalized(list(got), list(ref), rel=tol,
+                                  names=["dw", "dB", "dW"])
 
 
 def test_ligo_grow_full():

@@ -83,6 +83,21 @@ def test_grow_every_assigned_family(arch):
     assert np.isfinite(float(loss))
 
 
+def test_serve_hot_grow_smoke(monkeypatch, capsys):
+    """Growth-time elastic serving: --grow-to hot-grows the checkpoint at
+    startup through the cached GrowthPlan executor and serves the grown
+    architecture end-to-end (prefill + decode)."""
+    import sys
+    from repro.launch import serve
+    monkeypatch.setattr(sys, "argv", [
+        "serve", "--arch", "llama3-8b", "--smoke", "--grow-to", "2x",
+        "--batch", "1", "--prompt-len", "8", "--gen", "3"])
+    serve.main()
+    out = capsys.readouterr().out
+    assert "hot-grew" in out and "-grown" in out
+    assert "tok/s" in out          # decode ran on the grown model
+
+
 def test_training_converges_toward_process_entropy():
     cfg = TINY_GPT.scaled(name="conv", d_model=64, d_head=16, d_ff=128,
                           vocab_size=128)
