@@ -16,16 +16,20 @@ differentiates through ``apply_ligo`` on every SGD step, so the train-time
 hot loop is the backward, not the forward: wall times for ``jax.grad`` of
 the legacy and plan engines, and accounted HBM bytes for the einsum backward
 formulation vs the fused multi-cotangent Pallas backward kernel (one pass
-over the dP tiles, small-space partial reductions). Plus a ``train_ligo``
-step (scan phase vs per-step jit loop). Emits ``BENCH_growth.json`` (name,
-wall-time, est. HBM bytes) at the repo root so future PRs have a perf
-trajectory.
+over the dP tiles, small-space partial reductions). Plus the *sharded*
+executor (``mesh=`` in/out shardings) on 1 vs 8 forced virtual host devices
+— the 8-way leg runs in a subprocess since XLA fixes the device count at
+init — and a ``train_ligo`` step (scan phase vs per-step jit loop). Emits
+``BENCH_growth.json`` (name, wall-time, est. HBM bytes) at the repo root so
+future PRs have a perf trajectory.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
+import subprocess
+import sys
 import time
 from typing import Any, Dict, List, Optional
 
@@ -414,6 +418,78 @@ def _bench_apply_pair(name: str, c1, c2, iters: int, entries: List[Dict],
     }
 
 
+# Timed inside a subprocess: the XLA host-device count is fixed at jax init,
+# so the 8-virtual-device leg cannot run in the parent's single-device jax.
+_SHARDED_SNIPPET = """
+import json, time
+import jax
+from benchmarks.growth_lab import PROXY_BIG, PROXY_SMALL
+from repro.core import init_ligo_params, plan_for
+from repro.launch.mesh import make_mesh
+from repro.models import init_params
+
+assert jax.device_count() == 8, jax.devices()
+mesh = make_mesh((2, 4), ("data", "model"))
+sp = init_params(PROXY_SMALL, jax.random.PRNGKey(0))
+lg = init_ligo_params(jax.random.PRNGKey(1), PROXY_SMALL, PROXY_BIG)
+ex = plan_for(PROXY_SMALL, PROXY_BIG, sp).executor(mesh=mesh)
+jax.block_until_ready(ex(lg, sp))
+ts = []
+for _ in range({iters}):
+    t0 = time.perf_counter()
+    jax.block_until_ready(ex(lg, sp))
+    ts.append(time.perf_counter() - t0)
+print("SHARDED_MS:" + json.dumps(sorted(ts)[len(ts) // 2] * 1e3))
+"""
+
+
+def _bench_sharded_apply(entries: List[Dict], speedups: Dict,
+                         iters: int = 15) -> None:
+    """Sharded plan executor (in/out shardings + per-group constraints) on a
+    1-device mesh vs a forced-8-virtual-device 2x4 mesh, proxy pair.
+
+    On this 2-core CPU the 8-way leg measures partitioning/collective
+    overhead, not a speedup — the entries exist so the distributed growth
+    path has a wall-time trajectory (on a real pod each device owns 1/Nth
+    of every leaf-group GEMM)."""
+    from repro.core import init_ligo_params, plan_for
+    from repro.launch.mesh import make_mesh
+    from repro.models import init_params
+
+    sp = init_params(PROXY_SMALL, jax.random.PRNGKey(0))
+    lg = init_ligo_params(jax.random.PRNGKey(1), PROXY_SMALL, PROXY_BIG)
+    ex1 = plan_for(PROXY_SMALL, PROXY_BIG, sp).executor(
+        mesh=make_mesh((1,), ("data",)))
+    ms1 = _median_ms_interleaved({"sharded_1dev": lambda: ex1(lg, sp)},
+                                 iters)["sharded_1dev"]
+
+    repo = os.path.dirname(BENCH_JSON)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = (os.path.join(repo, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SNIPPET.format(iters=iters)],
+        capture_output=True, text=True, timeout=900, env=env, cwd=repo)
+    if proc.returncode != 0:
+        raise RuntimeError(f"8-device sharded bench failed:\n{proc.stderr}")
+    ms8 = json.loads(proc.stdout.split("SHARDED_MS:")[1].strip())
+
+    entries.extend([
+        {"name": "apply_ligo[proxy]/plan_sharded_1dev",
+         "wall_ms": round(ms1, 3), "est_hbm_bytes": None,
+         "note": "plan executor with mesh shardings on a 1-device mesh "
+                 "(pjit + constraint overhead over the plain plan entry)"},
+        {"name": "apply_ligo[proxy]/plan_sharded_8dev",
+         "wall_ms": round(ms8, 3), "est_hbm_bytes": None,
+         "note": "plan executor on an 8-virtual-device 2x4 (data, model) "
+                 "host mesh (subprocess, forced device count); CPU number "
+                 "tracks partitioning overhead, not pod-scale speedup"},
+    ])
+    speedups["sharded_apply"] = {"8dev_vs_1dev": round(ms1 / ms8, 3)}
+
+
 def _bench_train_step(entries: List[Dict], speedups: Dict,
                       steps: int = 12) -> None:
     """One LiGO-phase SGD step: pre-plan style (per-step jit call + legacy
@@ -496,6 +572,7 @@ def engine_bench(quick: bool = False, out_path: Optional[str] = None) -> Dict:
                           BERT_SMALL.scaled(dtype="float32"),
                           BERT_BASE.scaled(dtype="float32"),
                           iters=7, entries=entries, speedups=speedups)
+    _bench_sharded_apply(entries, speedups, iters=8 if quick else 15)
     _bench_train_step(entries, speedups, steps=10 if quick else 30)
     out = {
         "backend": jax.default_backend(),

@@ -188,7 +188,7 @@ def count_ligo_params(ligo: Params) -> int:
 # ---------------------------------------------------------------------------
 def apply_ligo(ligo: Params, small: Params, cfg1: ModelConfig,
                cfg2: ModelConfig, *, engine: str = "plan",
-               use_kernel: Optional[bool] = None) -> Params:
+               use_kernel: Optional[bool] = None, mesh=None) -> Params:
     """Grow a small model's parameter tree into the large architecture.
 
     ``engine="plan"`` (default) routes through the compiled
@@ -197,11 +197,21 @@ def apply_ligo(ligo: Params, small: Params, cfg1: ModelConfig,
     blend-expand on TPU. ``engine="legacy"`` keeps the original per-leaf
     einsum walk as the correctness oracle. ``use_kernel`` forces/disables the
     fused Pallas path (plan engine only; default: auto — TPU yes, CPU no).
+
+    ``mesh`` (plan engine only) runs the growth sharded: the executor is
+    pjit-compiled with ``params_pspecs``-derived in/out shardings (expanders
+    replicated, leaf stacks sharded like their model weights) and the fused
+    path runs per shard under ``shard_map``. Default: the ambient mesh
+    installed by ``compat.set_mesh`` when one exists — the train/serve
+    drivers grow distributed without passing anything.
     """
     if engine in ("plan", "auto"):
         from repro.core.plan import plan_for
+        if mesh is None:
+            from repro.distributed.sharding import current_mesh
+            mesh = current_mesh()
         plan = plan_for(cfg1, cfg2, small)
-        return plan.executor(use_kernel=use_kernel)(ligo, small)
+        return plan.executor(use_kernel=use_kernel, mesh=mesh)(ligo, small)
     if engine != "legacy":
         raise ValueError(f"unknown growth engine {engine!r}")
     width = ligo["width"]

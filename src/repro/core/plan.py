@@ -47,6 +47,23 @@ one jitted callable per plan, so eager callers (``grow()``'s final
 materialisation, benchmarks, serving-time elastic growth) pay a single
 dispatch instead of hundreds.
 
+Sharded growth
+--------------
+``apply``/``executor`` take an optional ``mesh``: the plan then carries
+shardings end-to-end. Per-leaf-group ``PartitionSpec``s are derived from
+:func:`repro.distributed.sharding.params_pspecs` (the same rules the trained
+model's weights live under, so grown leaves land exactly where the training
+step wants them), the LiGO operator tree — expanders ``E_in``/``E_out`` and
+depth blends — is replicated, and ``executor(mesh=...)`` emits ``jax.jit``
+with ``in_shardings``/``out_shardings`` built from those specs. Inside the
+traced apply each group's stacked contraction gets a sharding constraint, and
+the fused Pallas path runs the grouped custom_vjp **per shard** under
+``shard_map`` (:func:`repro.kernels.ligo_blend_expand_grouped_sharded`): the
+kernel only contracts the blend (L1) and expansion (A) dims, so sharding the
+trailing output dim (or the group dim) needs no cross-device traffic. Callers
+that sit under an ambient mesh (``compat.set_mesh`` — the train/serve
+drivers) pick this up automatically through ``apply_ligo``.
+
 The legacy path survives as ``apply_ligo(..., engine="legacy")`` — the
 correctness oracle every plan output is tested against.
 """
@@ -59,12 +76,17 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.configs.base import ModelConfig
 from repro.core import spec as S
 from repro.core.ligo import (_flatten, _kind_counts, _unflatten,
                              resolve_expander)
-from repro.kernels.ops import fused_eligible, ligo_blend_expand_grouped_vjp
+from repro.distributed.sharding import (named_shardings, params_pspecs,
+                                        physical_spec)
+from repro.kernels.ops import (fused_eligible,
+                               ligo_blend_expand_grouped_sharded,
+                               ligo_blend_expand_grouped_vjp)
 
 # Trace-time instrumentation (tests assert expanders are resolved once per
 # apply-trace, not once per leaf, and that train_ligo never re-traces).
@@ -191,6 +213,7 @@ class GrowthPlan:
         self.groups = groups
         self.exprs = exprs
         self._executors: Dict[Any, Any] = {}
+        self._spec_cache: Dict[Tuple[int, int], Any] = {}
 
     # -- resolution cache (one resolve per distinct (expr, role) per apply) --
     def _expander_table(self, width) -> Dict[ExprRef, jax.Array]:
@@ -240,27 +263,41 @@ class GrowthPlan:
         return X
 
     @staticmethod
-    def _run_group_fused(g: LeafGroup, X, E_in, E_out, w_g):
+    def _run_group_fused(g: LeafGroup, X, E_in, E_out, w_g,
+                         mesh: Optional[Mesh] = None):
         """Fused Pallas path: blend + left-expand for the *whole group* via
         the grouped custom_vjp kernel — the G leaves and any MoE expert dim E
         fold into the kernel grid, so the group is ONE launch forward and ONE
         fused multi-cotangent launch backward (the widened (L1, D2o, ·) stack
         never hits HBM in either direction). The right expansion is a plain
-        (already-optimal) matmul on the kernel's output."""
+        (already-optimal) matmul on the kernel's output.
+
+        With a ``mesh`` the custom_vjp runs per shard under ``shard_map``
+        (trailing-dim or group-dim sharding; see
+        :func:`repro.kernels.ligo_blend_expand_grouped_sharded`) — still one
+        launch per group per device."""
         moe = X.ndim == 5                      # (G, L1, E, a, b) expert stack
         Xg = X if moe else X[:, :, None]       # insert E=1 for plain leaves
-        P = ligo_blend_expand_grouped_vjp(w_g, E_in.astype(X.dtype), Xg,
-                                          use_kernel=True)
+        P = ligo_blend_expand_grouped_sharded(w_g, E_in.astype(X.dtype), Xg,
+                                              mesh, use_kernel=True)
         if not moe:
             P = P[:, :, 0]
         if E_out is not None:
             P = GrowthPlan._expand_out(P, E_out)
         return P
 
-    def apply(self, ligo, small, *, use_kernel: Optional[bool] = None):
-        """Θ_large = M(Θ_small) — plan-driven, differentiable in both args."""
+    def apply(self, ligo, small, *, use_kernel: Optional[bool] = None,
+              mesh: Optional[Mesh] = None):
+        """Θ_large = M(Θ_small) — plan-driven, differentiable in both args.
+
+        With a ``mesh``, each group's stacked contraction carries the
+        ``params_pspecs``-derived sharding constraint and the fused path runs
+        under ``shard_map`` — see :meth:`executor` for the fully-sharded
+        (``in_shardings``/``out_shardings``) entry point.
+        """
         if use_kernel is None:
             use_kernel = jax.default_backend() == "tpu"
+        group_sh = (self._group_shardings(mesh) if mesh is not None else None)
         width = ligo["width"]
         depth = ligo.get("depth", {})
         table = self._expander_table(width)
@@ -273,7 +310,7 @@ class GrowthPlan:
             kind: {} for kind in flat_stacks}
         grown_top: Dict[str, jax.Array] = {}
 
-        for g in self.groups:
+        for gidx, g in enumerate(self.groups):
             src = flat_stacks[g.kind] if g.kind else flat_top
             leaves = [src[p] for p in g.paths]
             blend_tree = depth.get(g.kind) if (g.stacked and g.kind) else None
@@ -283,9 +320,11 @@ class GrowthPlan:
             E_out = table[g.out_ref] if g.out_ref is not None else None
             X = leaves[0][None] if len(leaves) == 1 else jnp.stack(leaves)
             if use_kernel and g.kernel_ok and w_g is not None:
-                out = self._run_group_fused(g, X, E_in, E_out, w_g)
+                out = self._run_group_fused(g, X, E_in, E_out, w_g, mesh=mesh)
             else:
                 out = self._run_group(g, X, E_in, E_out, w_g)
+            if group_sh is not None:
+                out = jax.lax.with_sharding_constraint(out, group_sh[gidx])
             dst = grown_stacks[g.kind] if g.kind else grown_top
             for gi, p in enumerate(g.paths):
                 dst[p] = out[gi]
@@ -295,14 +334,106 @@ class GrowthPlan:
         out_tree.update(_unflatten(grown_top))
         return out_tree
 
-    def executor(self, *, use_kernel: Optional[bool] = None):
-        """A cached jitted ``(ligo, small) -> big`` for this plan."""
-        key = use_kernel
+    def executor(self, *, use_kernel: Optional[bool] = None,
+                 mesh: Optional[Mesh] = None):
+        """A cached jitted ``(ligo, small) -> big`` for this plan.
+
+        With a ``mesh`` the program is pjit-compiled with
+        ``in_shardings``/``out_shardings`` from :meth:`shardings`: the LiGO
+        operator tree replicated, small/large leaves sharded exactly like
+        their model weights (``params_pspecs``) — so growth of 8B+ targets
+        runs distributed and the grown tree lands ready for the sharded
+        train step with no resharding.
+        """
+        key = (use_kernel, mesh)
         if key not in self._executors:
-            self._executors[key] = jax.jit(
-                functools.partial(GrowthPlan.apply, self,
-                                  use_kernel=use_kernel))
+            fn = functools.partial(GrowthPlan.apply, self,
+                                   use_kernel=use_kernel, mesh=mesh)
+            if mesh is None:
+                self._executors[key] = jax.jit(fn)
+            else:
+                ligo_sh, small_sh, big_sh = self.shardings(mesh)
+                self._executors[key] = jax.jit(
+                    fn, in_shardings=(ligo_sh, small_sh),
+                    out_shardings=big_sh)
         return self._executors[key]
+
+    # -- sharding (PartitionSpecs per leaf/group, derived once per mesh) ----
+    def _out_shape(self, g: LeafGroup, L2: int) -> Tuple[int, ...]:
+        """Static per-leaf output shape of a group (big-model side)."""
+        def d2(ref, dflt):
+            if ref is None:
+                return dflt
+            return _expr_dims(self.exprs[ref], self.cfg1, self.cfg2)[0]
+        if g.vec:
+            j = d2(g.out_ref, g.shape[-1])
+            return (L2, j) if g.stacked else (j,)
+        i = d2(g.in_ref, g.shape[-2])
+        j = d2(g.out_ref, g.shape[-1])
+        mid = g.shape[(1 if g.stacked else 0):-2]
+        return ((L2,) + mid + (i, j)) if g.stacked else (mid + (i, j))
+
+    def _abstract_trees(self):
+        """(small, big) parameter trees of ShapeDtypeStructs rebuilt from the
+        plan's group metadata — structurally identical to the trees ``apply``
+        consumes and produces."""
+        c2 = _kind_counts(self.cfg2)
+        small: Dict[str, Dict[str, Any]] = {}
+        big: Dict[str, Dict[str, Any]] = {}
+        for g in self.groups:
+            out_shape = self._out_shape(g, c2.get(g.kind, 0))
+            for p in g.paths:
+                small.setdefault(g.kind, {})[p] = jax.ShapeDtypeStruct(
+                    g.shape, jnp.float32)
+                big.setdefault(g.kind, {})[p] = jax.ShapeDtypeStruct(
+                    out_shape, jnp.float32)
+
+        def tree(flat: Dict[str, Dict[str, Any]]):
+            t: Dict[str, Any] = {"layers": {
+                kind: _unflatten(d) for kind, d in flat.items() if kind}}
+            t.update(_unflatten(flat.get("", {})))
+            return t
+        return tree(small), tree(big)
+
+    def pspecs(self, mesh: Mesh):
+        """(small, big) logical ``PartitionSpec`` trees for this plan under
+        ``mesh`` — the exact specs :func:`params_pspecs` prescribes for the
+        small/large model weights. The LiGO operator tree carries no entry
+        here: expanders and depth blends enter replicated — every shard of a
+        leaf contraction consumes the expanders whole (the fused route's
+        G-dim fallback may re-slice the stacked blend internally, see
+        :func:`repro.kernels.ligo_blend_expand_grouped_sharded`)."""
+        model_sz = mesh.shape.get("model", 1)
+        dp_sz = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+        key = (model_sz, dp_sz)
+        if key not in self._spec_cache:
+            small_t, big_t = self._abstract_trees()
+            self._spec_cache[key] = (
+                params_pspecs(small_t, model_size=model_sz, dp_size=dp_sz),
+                params_pspecs(big_t, model_size=model_sz, dp_size=dp_sz))
+        return self._spec_cache[key]
+
+    def shardings(self, mesh: Mesh):
+        """(ligo, small, big) ``NamedSharding`` trees for ``executor(mesh=)``.
+        The ligo entry is a single replicated sharding used as a pytree
+        prefix for the whole operator tree."""
+        small_ps, big_ps = self.pspecs(mesh)
+        return (NamedSharding(mesh, PartitionSpec()),
+                named_shardings(small_ps, mesh),
+                named_shardings(big_ps, mesh))
+
+    def _group_shardings(self, mesh: Mesh):
+        """Per-group ``NamedSharding`` for the stacked (G, ...) group output:
+        a leading None for the group dim + the group's first leaf's
+        params_pspecs entry (all leaves in a group share one shape)."""
+        _, big_ps = self.pspecs(mesh)
+        flat = {kind: _flatten(stack)
+                for kind, stack in big_ps["layers"].items()}
+        flat[""] = _flatten({k: v for k, v in big_ps.items()
+                             if k != "layers"})
+        return [NamedSharding(mesh, physical_spec(
+            PartitionSpec(None, *flat[g.kind][g.paths[0]]), mesh))
+            for g in self.groups]
 
 
 # ---------------------------------------------------------------------------

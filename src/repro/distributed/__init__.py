@@ -1,6 +1,6 @@
-from repro.distributed.sharding import (P, batch_specs, maybe_shard,
-                                        named_shardings, params_pspecs,
-                                        physical_spec)
+from repro.distributed.sharding import (P, batch_specs, divisible_axes,
+                                        maybe_shard, named_shardings,
+                                        params_pspecs, physical_spec)
 
 __all__ = ["P", "maybe_shard", "params_pspecs", "named_shardings",
-           "physical_spec", "batch_specs"]
+           "physical_spec", "batch_specs", "divisible_axes"]

@@ -56,6 +56,23 @@ def maybe_shard(x: jax.Array, spec: P) -> jax.Array:
     return jax.lax.with_sharding_constraint(x, physical_spec(spec, mesh))
 
 
+def divisible_axes(dim: int, mesh) -> tuple:
+    """Largest-first greedy subset of mesh axes whose size product divides
+    ``dim`` — the axes a dimension of that extent can be sharded over without
+    padding. Returns () when no axis (of size > 1) divides ``dim``.
+
+    Used by the sharded growth path (kernels.ops / core.plan) to pick which
+    dim of a leaf-group stack each shard_map shard owns."""
+    chosen: list = []
+    prod = 1
+    for name, size in sorted(mesh.shape.items(), key=lambda kv: (-kv[1],
+                                                                 str(kv[0]))):
+        if size > 1 and dim % (prod * size) == 0:
+            chosen.append(name)
+            prod *= size
+    return tuple(chosen)
+
+
 # ---------------------------------------------------------------------------
 # Parameter partition specs
 # ---------------------------------------------------------------------------

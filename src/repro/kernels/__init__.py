@@ -5,6 +5,7 @@ from repro.kernels.ops import (LAUNCH_COUNTS, flash_attention,
                                ligo_blend_expand_bwd_ref,
                                ligo_blend_expand_grouped,
                                ligo_blend_expand_grouped_ref,
+                               ligo_blend_expand_grouped_sharded,
                                ligo_blend_expand_grouped_vjp,
                                ligo_blend_expand_ref, ligo_blend_expand_vjp,
                                ligo_grow, ligo_grow_ref)
@@ -13,5 +14,6 @@ __all__ = ["LAUNCH_COUNTS", "flash_attention", "flash_attention_ref",
            "fused_eligible", "fused_vmem_bytes", "ligo_blend_expand",
            "ligo_blend_expand_bwd_fused", "ligo_blend_expand_bwd_ref",
            "ligo_blend_expand_grouped", "ligo_blend_expand_grouped_ref",
+           "ligo_blend_expand_grouped_sharded",
            "ligo_blend_expand_grouped_vjp", "ligo_blend_expand_ref",
            "ligo_blend_expand_vjp", "ligo_grow", "ligo_grow_ref"]

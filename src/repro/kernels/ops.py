@@ -123,6 +123,50 @@ def ligo_blend_expand_grouped_vjp(w, B, W, *, use_kernel=None):
     return _blend_expand_grouped_vjp(bool(use_kernel), w, B, W)
 
 
+def ligo_blend_expand_grouped_sharded(w, B, W, mesh, *, use_kernel=None):
+    """Grouped blend-expand distributed over ``mesh`` via ``shard_map``.
+
+    Shards the trailing ``Bd`` dim of the leaf stacks — or, when no mesh-axis
+    subset divides it, the leaf-group dim ``G`` — so every device runs the
+    fused custom_vjp kernel (or the einsum reference) on its local shard with
+    zero cross-device traffic: the kernel only contracts ``L1`` (the blend)
+    and ``A`` (the expansion), and both stay whole per shard. The expander
+    ``B`` always rides replicated (every shard contracts against it whole);
+    ``w`` is replicated on the Bd route but shards with the group dim on the
+    G fallback (its leading dim is G). Cotangents of replicated operands are
+    psum'd by the shard_map transpose, so the route stays differentiable in
+    all three operands either way. Falls back to the plain
+    (GSPMD-replicated) call when ``mesh`` is None or neither dim is
+    divisible.
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if mesh is None:
+        return ligo_blend_expand_grouped_vjp(w, B, W, use_kernel=use_kernel)
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.distributed.sharding import divisible_axes
+
+    G, Bd = W.shape[0], W.shape[-1]
+    axes_b = divisible_axes(Bd, mesh)
+    axes_g = () if axes_b else divisible_axes(G, mesh)
+    if axes_b:
+        spec_w = P()
+        spec_W = spec_out = P(None, None, None, None, axes_b)
+    elif axes_g:
+        spec_w = P(axes_g, None, None)
+        spec_W = spec_out = P(axes_g, None, None, None, None)
+    else:
+        return ligo_blend_expand_grouped_vjp(w, B, W, use_kernel=use_kernel)
+    fn = compat.shard_map(
+        functools.partial(ligo_blend_expand_grouped_vjp,
+                          use_kernel=use_kernel),
+        mesh=mesh, in_specs=(spec_w, P(), spec_W), out_specs=spec_out,
+        check_vma=False)
+    return fn(w, B, W)
+
+
 def ligo_blend_expand_vjp(w, B, W, *, use_kernel=None):
     """Differentiable fused ``P[l2] = B @ (Σ_l w[l2,l] W[l])``.
 

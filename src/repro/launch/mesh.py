@@ -26,7 +26,21 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_mesh(shape, axes):
-    return compat.make_mesh(shape, axes)
+    """Device mesh of ``shape`` over ``axes``.
+
+    When ``prod(shape)`` is smaller than the device count (e.g. a 2-device
+    mesh on the forced-8-virtual-device CPU test lane), the mesh is built
+    over the first ``prod(shape)`` devices; a full-size mesh goes through
+    :func:`repro.compat.make_mesh` so jax picks a performant device order.
+    """
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if n == len(devs):
+        return compat.make_mesh(shape, axes)
+    if n > len(devs):
+        raise ValueError(f"mesh {tuple(shape)} needs {n} devices, "
+                         f"have {len(devs)}")
+    return jax.sharding.Mesh(np.array(devs[:n]).reshape(shape), tuple(axes))
 
 
 def make_host_mesh(n: Optional[int] = None, axis: str = "data"):

@@ -9,7 +9,10 @@ loaded checkpoint at startup through the compiled GrowthPlan executor
 (:func:`repro.core.plan_for` — cached expanders, batched leaf groups, fused
 Pallas blend-expand on TPU), then serves the *grown* architecture. The plan
 executor is memoised, so repeated growth of the same (cfg1, cfg2) pair pays
-a single dispatch (~ms), cheap enough to run per serving process.
+a single dispatch (~ms), cheap enough to run per serving process. The growth
+itself runs *sharded* under the serving mesh (in/out shardings from
+``params_pspecs``), so growing to an 8B+ target never funnels the tree
+through one device.
 
 On the production mesh, params are FSDP+TP sharded and the KV cache is
 sequence- or head-sharded per repro.distributed.sharding.state_pspecs; on CPU
@@ -31,15 +34,25 @@ from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.model import decode_step, init_params, prefill
 
 
-def hot_grow(params, cfg, target: str, *, smoke: bool = False, seed: int = 1):
+def hot_grow(params, cfg, target: str, *, smoke: bool = False, seed: int = 1,
+             mesh=None):
     """Grow ``params`` (cfg) to the ``target`` architecture at startup.
 
     ``target`` is a registry arch name (reduced via ``smoke_config`` when
     serving in smoke mode) or ``"2x"`` for ``grow_target(cfg)``. Returns
     ``(grown_params, cfg2)``. Uses the memoised GrowthPlan executor, so the
     growth itself is one compiled dispatch after the first call.
+
+    ``mesh`` defaults to the ambient mesh (we run inside ``set_mesh`` in
+    ``main``): the growth executes **sharded** — in/out shardings follow
+    ``params_pspecs``, the LiGO expanders ride replicated — so the grown
+    tree lands already laid out for the sharded decode path and 8B+ targets
+    never materialise on one device.
     """
     from repro.core import init_ligo_params, plan_for
+    from repro.distributed.sharding import current_mesh
+    if mesh is None:
+        mesh = current_mesh()
     if target == "2x":
         cfg2 = grow_target(cfg)
     else:
@@ -48,11 +61,13 @@ def hot_grow(params, cfg, target: str, *, smoke: bool = False, seed: int = 1):
             cfg2 = smoke_config(cfg2)
     ligo = init_ligo_params(jax.random.PRNGKey(seed), cfg, cfg2)
     t0 = time.perf_counter()
-    grown = plan_for(cfg, cfg2, params).executor()(ligo, params)
+    grown = plan_for(cfg, cfg2, params).executor(mesh=mesh)(ligo, params)
     jax.block_until_ready(jax.tree.leaves(grown)[0])
+    ndev = 1 if mesh is None else mesh.size
     print(f"[serve] hot-grew {cfg.name} -> {cfg2.name} "
           f"({cfg.n_layers}L/{cfg.d_model}d -> {cfg2.n_layers}L/"
-          f"{cfg2.d_model}d) in {(time.perf_counter() - t0) * 1e3:.1f} ms")
+          f"{cfg2.d_model}d) on {ndev} device(s) in "
+          f"{(time.perf_counter() - t0) * 1e3:.1f} ms")
     return grown, cfg2
 
 
@@ -70,7 +85,12 @@ def main():
                     help="hot-grow the checkpoint to this arch (or '2x' for "
                          "a doubled-depth/1.5x-width same-family target) at "
                          "startup via the cached GrowthPlan executor, then "
-                         "serve the grown model")
+                         "serve the grown model. Distributed growth: under "
+                         "--mesh single|multi (or any ambient mesh) the "
+                         "growth runs sharded — in/out shardings follow "
+                         "params_pspecs, expanders replicated, the fused "
+                         "kernel per-shard under shard_map — so 8B+ targets "
+                         "grow in place on the production mesh")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)

@@ -96,6 +96,13 @@ def main():
                   f"({small_cfg.param_count()/1e6:.1f}M) for "
                   f"{args.pretrain_steps} steps")
             sp = init_params(small_cfg, jax.random.PRNGKey(args.seed))
+            # source weights live under the same sharding rules as the big
+            # model's, so the grow phase (apply_ligo picks up the ambient
+            # mesh -> sharded GrowthPlan executor) starts from mesh-resident
+            # leaves and the materialised tree lands pre-sharded for the
+            # main loop.
+            sp = jax.tree.map(jax.device_put, sp, named_shardings(
+                params_pspecs(sp, model_size=model_sz, dp_size=dp_sz), mesh))
             s_opt = adamw_init(sp)
             s_step = jax.jit(make_train_step(small_cfg, tcfg))
             s_loader = GlobalBatchLoader(small_cfg, mesh, args.batch,

@@ -1,3 +1,4 @@
+import math
 import os
 import subprocess
 import sys
@@ -7,6 +8,41 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
+
+# ---------------------------------------------------------------------------
+# Multi-device test lane: REPRO_FORCE_HOST_DEVICES=N makes the *in-process*
+# jax see N virtual CPU devices. XLA reads the flag at backend init, so it
+# must land in XLA_FLAGS before jax is first imported — conftest import time
+# is the one hook that runs before any test module. CI's second tier-1 job
+# sets REPRO_FORCE_HOST_DEVICES=8 and runs the whole suite under it.
+# ---------------------------------------------------------------------------
+_FORCED = os.environ.get("REPRO_FORCE_HOST_DEVICES")
+if _FORCED and ("--xla_force_host_platform_device_count"
+                not in os.environ.get("XLA_FLAGS", "")):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_FORCED}")
+
+
+def require_host_devices(n: int):
+    """Skip the calling test unless the session has >= n devices."""
+    import jax
+    if jax.device_count() < n:
+        pytest.skip(f"needs {n} devices "
+                    f"(run under REPRO_FORCE_HOST_DEVICES={n})")
+
+
+@pytest.fixture
+def mesh_factory():
+    """Mesh builder over the (forced) host devices: ``make((2, 4), ("data",
+    "model"))`` — skips when the session has fewer devices than the mesh
+    needs, so mesh-parametrized tests run fully on the 8-virtual-device CI
+    lane and degrade to the 1-device cases elsewhere."""
+    def make(shape, axes):
+        require_host_devices(math.prod(shape))
+        from repro.launch.mesh import make_mesh
+        return make_mesh(shape, axes)
+    return make
 
 
 def assert_trees_close_normalized(got, want, rel=1e-5, names=None):
