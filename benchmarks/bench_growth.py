@@ -19,9 +19,13 @@ formulation vs the fused multi-cotangent Pallas backward kernel (one pass
 over the dP tiles, small-space partial reductions). Plus the *sharded*
 executor (``mesh=`` in/out shardings) on 1 vs 8 forced virtual host devices
 — the 8-way leg runs in a subprocess since XLA fixes the device count at
-init — and a ``train_ligo`` step (scan phase vs per-step jit loop). Emits
-``BENCH_growth.json`` (name, wall-time, est. HBM bytes) at the repo root so
-future PRs have a perf trajectory.
+init — and a ``train_ligo`` step (scan phase vs per-step jit loop). Plus the
+growth-trajectory subsystem: composed-vs-sequential multi-hop apply (one
+fused A→C plan of the analytically composed operator vs hop-by-hop with the
+intermediate model materialised) and per-stage wall times of a tiny 3-stage
+train→grow→train trajectory (growth legs include AdamW-moment growth through
+the squared operator). Emits ``BENCH_growth.json`` (name, wall-time, est.
+HBM bytes) at the repo root so future PRs have a perf trajectory.
 """
 from __future__ import annotations
 
@@ -559,6 +563,103 @@ def _bench_train_step(entries: List[Dict], speedups: Dict,
                                     round(legacy_ms / scan_ms, 3)}
 
 
+# Mid-point of the proxy growth chain: heads grow 4→8 at the first hop and
+# the kv count stays at PROXY_SMALL's 4 (kv dims must be monotone along a
+# chain — expanders only grow), so the second hop is GQA-geometry-identical
+# to PROXY_BIG.
+PROXY_MID = PROXY_SMALL.scaled(
+    name="proxy-mid", n_layers=6, d_model=96, n_heads=8, d_head=16,
+    d_ff=384)
+
+
+def _bench_compose(entries: List[Dict], speedups: Dict,
+                   iters: int = 10) -> None:
+    """Composed 2-hop growth (ONE fused A→C plan apply of the analytically
+    composed operator) vs sequential application (A→B then B→C plan
+    applies, intermediate model materialised) on the proxy chain."""
+    from repro.core import compose_chain, init_ligo_params, plan_for
+    from repro.models import init_params
+
+    chain = [PROXY_SMALL, PROXY_MID, PROXY_BIG]
+    sp = init_params(chain[0], jax.random.PRNGKey(0))
+    hops = [init_ligo_params(jax.random.PRNGKey(1 + i), a, b)
+            for i, (a, b) in enumerate(zip(chain[:-1], chain[1:]))]
+    composed = compose_chain(hops, chain)
+
+    plan_ac = plan_for(chain[0], chain[2], sp)
+    plan_ab = plan_for(chain[0], chain[1], sp)
+    ex_ac = plan_ac.executor(use_kernel=False)
+    ex_ab = plan_ab.executor(use_kernel=False)
+    mid = ex_ab(hops[0], sp)
+    plan_bc = plan_for(chain[1], chain[2], mid)
+    ex_bc = plan_bc.executor(use_kernel=False)
+
+    ms = _median_ms_interleaved({
+        "composed": lambda: ex_ac(composed, sp),
+        "sequential": lambda: ex_bc(hops[1], ex_ab(hops[0], sp)),
+    }, iters)
+
+    big = ex_ac(composed, sp)
+    hbm_comp = _est_apply_hbm(plan_ac, sp, big, composed, mode="plan")
+    hbm_seq = (_est_apply_hbm(plan_ab, sp, mid, hops[0], mode="plan")
+               + _est_apply_hbm(plan_bc, mid, big, hops[1], mode="plan"))
+    entries.extend([
+        {"name": "compose_apply[proxy,2hop]/composed",
+         "wall_ms": round(ms["composed"], 3), "est_hbm_bytes": hbm_comp,
+         "note": "analytically composed A->C operator through ONE fused "
+                 "GrowthPlan apply — no intermediate model (serve "
+                 "--grow-to a,b / skip-stage trajectory restarts)"},
+        {"name": "compose_apply[proxy,2hop]/sequential",
+         "wall_ms": round(ms["sequential"], 3), "est_hbm_bytes": hbm_seq,
+         "note": "hop-by-hop A->B->C plan applies; the B-sized tree is "
+                 "materialised and re-read by the second hop"},
+    ])
+    speedups["compose_apply"] = {
+        "composed_vs_sequential": round(ms["sequential"] / ms["composed"],
+                                        3),
+        "composed_vs_sequential_est_hbm": round(hbm_seq / hbm_comp, 3),
+    }
+
+
+def _bench_trajectory(entries: List[Dict], speedups: Dict,
+                      steps: int = 6) -> None:
+    """Per-stage wall times of a tiny 3-stage trajectory (train→grow→train→
+    grow→train) at proxy scale — the end-to-end cost profile of the
+    scheduled-growth subsystem (train legs include compile)."""
+    import tempfile
+    from repro.trajectory import (GrowthSpec, Stage, TrajectoryConfig,
+                                  TrajectoryRunner)
+    traj = TrajectoryConfig(stages=(
+        Stage(PROXY_SMALL, steps),
+        Stage(PROXY_MID, steps, GrowthSpec(method="ligo", ligo_steps=4)),
+        Stage(PROXY_BIG, steps, GrowthSpec(method="ligo", ligo_steps=4))),
+        batch=8, seq=32, lr=1e-3, checkpoint_every=steps)
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as d:
+        res = TrajectoryRunner(traj, ckpt_dir=d, verbose=False).run()
+    total_s = time.perf_counter() - t0
+    names = [st.cfg.name for st in traj.stages]
+    for s in sorted(res["timings"]):
+        t = res["timings"][s]
+        if t["grow_ms"]:
+            entries.append({
+                "name": f"trajectory[proxy,3stage]/stage{s}_grow",
+                "wall_ms": round(t["grow_ms"], 3), "est_hbm_bytes": None,
+                "note": f"{names[s - 1]} -> {names[s]}: LiGO phase + "
+                        "fused apply + AdamW moment growth (squared "
+                        "operator), post-growth checkpoint"})
+        entries.append({
+            "name": f"trajectory[proxy,3stage]/stage{s}_train"
+                    f"[{steps}steps]",
+            "wall_ms": round(t["train_ms"], 3), "est_hbm_bytes": None,
+            "note": f"{names[s]} train leg incl. jit compile + periodic "
+                    "checkpoints"})
+    speedups["trajectory"] = {
+        "total_s": round(total_s, 3),
+        "final_loss": round(res["history"][-1][2], 4),
+    }
+
+
 def engine_bench(quick: bool = False, out_path: Optional[str] = None) -> Dict:
     """Time plan vs legacy apply_ligo + a train_ligo step; write
     BENCH_growth.json. ``quick`` skips the full-size BERT pair."""
@@ -574,6 +675,8 @@ def engine_bench(quick: bool = False, out_path: Optional[str] = None) -> Dict:
                           iters=7, entries=entries, speedups=speedups)
     _bench_sharded_apply(entries, speedups, iters=8 if quick else 15)
     _bench_train_step(entries, speedups, steps=10 if quick else 30)
+    _bench_compose(entries, speedups, iters=6 if quick else 12)
+    _bench_trajectory(entries, speedups, steps=4 if quick else 8)
     out = {
         "backend": jax.default_backend(),
         "pallas_leg": "excluded on CPU (interpret mode is not a timing "

@@ -70,7 +70,9 @@ def save_step(directory: str, step: int, tree: Params,
     try:
         np.savez(os.path.join(tmp, f"arrays.{process_index}.npz"), **save)
         with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump({"step": step, "_dtypes": dtypes, **(meta or {})}, f)
+            # reserved keys last: a caller round-tripping a restored meta
+            # dict must never override the authoritative step/_dtypes
+            json.dump({**(meta or {}), "step": step, "_dtypes": dtypes}, f)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
@@ -93,6 +95,18 @@ def list_steps(directory: str):
     return sorted(steps)
 
 
+def load_meta(directory: str, step: int) -> Dict:
+    """The ``meta.json`` of one checkpoint, without touching the arrays.
+
+    Cheap by construction — resumable multi-stage jobs (repro.trajectory)
+    must read the stage index / config identity *before* they can build the
+    restore template, so meta has to be readable first.
+    """
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "meta.json")) as f:
+        return json.load(f)
+
+
 def load_step(directory: str, step: int) -> Tuple[Dict[str, np.ndarray], Dict]:
     d = os.path.join(directory, f"step_{step:08d}")
     flat: Dict[str, np.ndarray] = {}
@@ -101,8 +115,7 @@ def load_step(directory: str, step: int) -> Tuple[Dict[str, np.ndarray], Dict]:
             with np.load(os.path.join(d, name)) as z:
                 for k in z.files:
                     flat[k] = z[k]
-    with open(os.path.join(d, "meta.json")) as f:
-        meta = json.load(f)
+    meta = load_meta(directory, step)
     for k, dt in meta.get("_dtypes", {}).items():
         import ml_dtypes  # noqa: F401 — registers bfloat16 & friends
         flat[k] = flat[k].view(np.dtype(dt))

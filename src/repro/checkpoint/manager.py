@@ -66,6 +66,18 @@ class CheckpointManager:
         steps = io.list_steps(self.dir)
         return steps[-1] if steps else None
 
+    def latest_meta(self) -> Optional[Dict]:
+        """Meta dict of the newest checkpoint, arrays untouched.
+
+        Mid-trajectory resumes peek this first: the stage index / config
+        identity recorded at save time decides which architecture's template
+        (and which mesh shardings) ``restore`` is then called with.
+        """
+        step = self.latest_step()
+        if step is None:
+            return None
+        return io.load_meta(self.dir, step)
+
     def restore(self, step: int, template: Params,
                 shardings: Optional[Params] = None
                 ) -> Tuple[Params, Dict]:

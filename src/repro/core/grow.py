@@ -132,13 +132,27 @@ def grow(small_params, cfg1: ModelConfig, cfg2: ModelConfig, *,
          data_it: Optional[Iterator] = None, ligo_steps: int = 100,
          ligo_lr: float = 1e-3, ligo_momentum: float = 0.9,
          loss_chunk: int = 0, depth_init: str = "stack",
-         engine: str = "plan",
+         engine: str = "plan", opt_state=None, grow_optimizer: bool = True,
          ) -> Tuple[Dict, Dict[str, Any]]:
-    """Grow Θ_small → Θ_large. Returns (big_params, info)."""
+    """Grow Θ_small → Θ_large. Returns (big_params, info).
+
+    When an AdamW ``opt_state`` for the small model is passed, the grown
+    state lands in ``info["opt_state"]``: moments carried through the
+    learned/classical operator with method-correct semantics (first moment
+    linear, second moment through the squared operator, schedule count
+    preserved — :func:`repro.optim.grow_adamw_state`), so post-growth
+    training *continues* instead of re-warming. ``method="random"`` (or
+    ``grow_optimizer=False``) has no operator to carry state through and
+    returns a fresh ``adamw_init`` of the big tree.
+    """
     key = key if key is not None else jax.random.PRNGKey(0)
     info: Dict[str, Any] = {"method": method}
     if method == "random":
-        return init_params(cfg2, key), info
+        big = init_params(cfg2, key)
+        if opt_state is not None:
+            from repro.optim import adamw_init
+            info["opt_state"] = adamw_init(big)
+        return big, info
     if method == "stackbert":
         op = ops.stackbert_operator(cfg1, cfg2, key=key)
     elif method == "interpolation":
@@ -159,4 +173,12 @@ def grow(small_params, cfg1: ModelConfig, cfg2: ModelConfig, *,
         raise ValueError(method)
     big = apply_ligo(op, small_params, cfg1, cfg2, engine=engine)
     info["operator"] = op
+    if opt_state is not None:
+        if grow_optimizer:
+            from repro.optim import grow_adamw_state
+            info["opt_state"] = grow_adamw_state(opt_state, op, cfg1, cfg2,
+                                                 engine=engine)
+        else:
+            from repro.optim import adamw_init
+            info["opt_state"] = adamw_init(big)
     return big, info

@@ -188,7 +188,8 @@ def count_ligo_params(ligo: Params) -> int:
 # ---------------------------------------------------------------------------
 def apply_ligo(ligo: Params, small: Params, cfg1: ModelConfig,
                cfg2: ModelConfig, *, engine: str = "plan",
-               use_kernel: Optional[bool] = None, mesh=None) -> Params:
+               use_kernel: Optional[bool] = None, mesh=None,
+               square: bool = False) -> Params:
     """Grow a small model's parameter tree into the large architecture.
 
     ``engine="plan"`` (default) routes through the compiled
@@ -204,6 +205,13 @@ def apply_ligo(ligo: Params, small: Params, cfg1: ModelConfig,
     path runs per shard under ``shard_map``. Default: the ambient mesh
     installed by ``compat.set_mesh`` when one exists — the train/serve
     drivers grow distributed without passing anything.
+
+    ``square=True`` applies the *elementwise-squared* operator: every
+    resolved leaf expander and depth blend is squared after resolution
+    (resolve-then-square — for ``gamma``'s group averaging the two orders
+    differ). This is the AdamW second-moment map: if ``p_large = Σ cᵢ pᵢ``
+    then under the independent-gradient approximation ``v_large = Σ cᵢ² vᵢ``
+    — see :func:`repro.optim.grow_adamw_state`.
     """
     if engine in ("plan", "auto"):
         from repro.core.plan import plan_for
@@ -211,12 +219,16 @@ def apply_ligo(ligo: Params, small: Params, cfg1: ModelConfig,
             from repro.distributed.sharding import current_mesh
             mesh = current_mesh()
         plan = plan_for(cfg1, cfg2, small)
-        return plan.executor(use_kernel=use_kernel, mesh=mesh)(ligo, small)
+        return plan.executor(use_kernel=use_kernel, mesh=mesh,
+                             square=square)(ligo, small)
     if engine != "legacy":
         raise ValueError(f"unknown growth engine {engine!r}")
     width = ligo["width"]
     top = S.top_spec()
     out_layers: Params = {}
+
+    def _sq(E):
+        return None if E is None else E * E
 
     for kind, stack in small["layers"].items():
         lspec = S.layer_spec(kind, cfg1, cfg2)
@@ -227,11 +239,15 @@ def apply_ligo(ligo: Params, small: Params, cfg1: ModelConfig,
             in_e, out_e = lspec[path]
             E_in = resolve_expander(in_e, width, cfg1, cfg2, "in")
             E_out = resolve_expander(out_e, width, cfg1, cfg2, "out")
+            if square:
+                E_in, E_out = _sq(E_in), _sq(E_out)
             vec = W.ndim == (2 if stacked else 1)
             wide = (expand_vector(W, E_out) if vec
                     else expand_leaf(W, E_in, E_out))
             if stacked and kind in ligo["depth"]:
                 blend = ligo["depth"][kind][path]
+                if square:
+                    blend = blend * blend
                 wide = jnp.einsum("kl,l...->k...", blend.astype(wide.dtype),
                                   wide)
             grown[path] = wide
@@ -244,6 +260,8 @@ def apply_ligo(ligo: Params, small: Params, cfg1: ModelConfig,
         in_e, out_e = top[path]
         E_in = resolve_expander(in_e, width, cfg1, cfg2, "in")
         E_out = resolve_expander(out_e, width, cfg1, cfg2, "out")
+        if square:
+            E_in, E_out = _sq(E_in), _sq(E_out)
         if W.ndim == 1:
             grown_top[path] = expand_vector(W, E_out)
         else:

@@ -64,6 +64,20 @@ trailing output dim (or the group dim) needs no cross-device traffic. Callers
 that sit under an ambient mesh (``compat.set_mesh`` — the train/serve
 drivers) pick this up automatically through ``apply_ligo``.
 
+Operator composition
+--------------------
+Multi-stage trajectories (``repro.trajectory``) chain hops small→mid→…→large.
+:func:`compose_ligo` / :func:`compose_chain` fold successive operators into
+one ``cfg_A→cfg_C`` LiGO tree analytically — Kronecker width factors as
+matrix products, depth patterns as chained blends — so any stage-A→stage-C
+growth (``serve --grow-to a,b,c``, skip-stage restarts) runs as a *single*
+fused GrowthPlan without ever materialising the intermediate models. This
+exactness is for the *linear* map (parameters, first moments): the squared
+(second-moment) operator of a composition is NOT the composition of the
+squared hops for dense or GQA-``gamma`` factors (elementwise ``(B·A)²``
+carries cross terms that ``B²·A²`` does not) — grow AdamW ``v`` per hop
+when that distinction matters (see the ROADMAP open item).
+
 The legacy path survives as ``apply_ligo(..., engine="legacy")`` — the
 correctness oracle every plan output is tested against.
 """
@@ -287,13 +301,18 @@ class GrowthPlan:
         return P
 
     def apply(self, ligo, small, *, use_kernel: Optional[bool] = None,
-              mesh: Optional[Mesh] = None):
+              mesh: Optional[Mesh] = None, square: bool = False):
         """Θ_large = M(Θ_small) — plan-driven, differentiable in both args.
 
         With a ``mesh``, each group's stacked contraction carries the
         ``params_pspecs``-derived sharding constraint and the fused path runs
         under ``shard_map`` — see :meth:`executor` for the fully-sharded
         (``in_shardings``/``out_shardings``) entry point.
+
+        ``square=True`` squares every resolved expander and depth blend
+        elementwise after resolution — the AdamW second-moment map (the
+        growth operator is linear in its factors, so the fused kernel and
+        every contraction order work unchanged on the squared factors).
         """
         if use_kernel is None:
             use_kernel = jax.default_backend() == "tpu"
@@ -301,6 +320,8 @@ class GrowthPlan:
         width = ligo["width"]
         depth = ligo.get("depth", {})
         table = self._expander_table(width)
+        if square:
+            table = {ref_: E * E for ref_, E in table.items()}
 
         flat_stacks = {kind: _flatten(stack)
                        for kind, stack in small["layers"].items()}
@@ -316,6 +337,8 @@ class GrowthPlan:
             blend_tree = depth.get(g.kind) if (g.stacked and g.kind) else None
             w_g = (jnp.stack([blend_tree[p] for p in g.paths])
                    if blend_tree is not None else None)
+            if square and w_g is not None:
+                w_g = w_g * w_g
             E_in = table[g.in_ref] if g.in_ref is not None else None
             E_out = table[g.out_ref] if g.out_ref is not None else None
             X = leaves[0][None] if len(leaves) == 1 else jnp.stack(leaves)
@@ -335,7 +358,7 @@ class GrowthPlan:
         return out_tree
 
     def executor(self, *, use_kernel: Optional[bool] = None,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None, square: bool = False):
         """A cached jitted ``(ligo, small) -> big`` for this plan.
 
         With a ``mesh`` the program is pjit-compiled with
@@ -343,12 +366,15 @@ class GrowthPlan:
         operator tree replicated, small/large leaves sharded exactly like
         their model weights (``params_pspecs``) — so growth of 8B+ targets
         runs distributed and the grown tree lands ready for the sharded
-        train step with no resharding.
+        train step with no resharding. ``square=True`` compiles the
+        elementwise-squared (second-moment) variant — AdamW ``v`` trees
+        share the parameter shardings, so the same in/out specs apply.
         """
-        key = (use_kernel, mesh)
+        key = (use_kernel, mesh, square)
         if key not in self._executors:
             fn = functools.partial(GrowthPlan.apply, self,
-                                   use_kernel=use_kernel, mesh=mesh)
+                                   use_kernel=use_kernel, mesh=mesh,
+                                   square=square)
             if mesh is None:
                 self._executors[key] = jax.jit(fn)
             else:
@@ -509,3 +535,108 @@ def _build_plan(cfg1: ModelConfig, cfg2: ModelConfig, sig) -> GrowthPlan:
 def plan_for(cfg1: ModelConfig, cfg2: ModelConfig, small) -> GrowthPlan:
     """The (memoised) GrowthPlan for growing ``small`` from cfg1 to cfg2."""
     return _build_plan(cfg1, cfg2, _tree_signature(small))
+
+
+# ---------------------------------------------------------------------------
+# Operator composition: stage-A→B ∘ stage-B→C as a single A→C operator
+# ---------------------------------------------------------------------------
+# A growth trajectory (small→mid→…→large, repro.trajectory) produces one
+# LiGO-parameter tree per hop. Because every hop is *linear* in Θ and the
+# depth blend acts on the layer axis while the width expanders act on the
+# matrix axes, successive hops compose analytically:
+#
+#   P₃ = w_B·(E_B P₂ F_Bᵀ)  with  P₂ = w_A·(E_A W F_Aᵀ)
+#      = (w_B w_A)·((E_B E_A) W (F_B F_A)ᵀ)
+#
+# i.e. the composed operator's Kronecker width factors are plain matrix
+# products of the per-hop factors and its depth patterns are chained
+# ``(L₃×L₂)·(L₂×L₁)`` blends. The tying registry commutes with this:
+# ``Γ₂₃(B)·Γ₁₂(A) = Γ₁₃(B·A)`` (the G₂ row-repeats of the inner hop cancel
+# the /G₂ column-averaging of the outer hop) and block-diagonal ``seg``
+# expressions compose block-by-block. So ``compose_ligo`` needs only the
+# *named* width matrices — never the resolved per-leaf expanders — and the
+# result is an ordinary LiGO tree for ``(cfg1, cfg3)``: feed it to
+# ``plan_for(cfg1, cfg3, small)`` and any stage-A→stage-C growth runs as a
+# SINGLE fused GrowthPlan without materialising the intermediate model
+# (``serve --grow-to a,b,c``, skip-stage trajectory restarts).
+def _chain_matmul(B, A):
+    """``B @ A`` for two operator factors, exactly rounded.
+
+    Concrete factors multiply on the host in float64 and round once to the
+    storage dtype — the composed operator then carries no accumulation error
+    of its own, keeping composed-vs-sequential apply differences down to the
+    two applies' own rounding (≤1e-6 relative at trajectory scales). Traced
+    factors (composing under jit) fall back to a device matmul.
+    """
+    import numpy as np
+    if isinstance(B, jax.core.Tracer) or isinstance(A, jax.core.Tracer):
+        return B @ A
+    out = np.asarray(B, np.float64) @ np.asarray(A, np.float64)
+    return jnp.asarray(out.astype(jnp.promote_types(B.dtype, A.dtype)))
+
+
+def compose_ligo(op_a: Dict, op_b: Dict, cfg1: ModelConfig,
+                 cfg2: ModelConfig, cfg3: ModelConfig) -> Dict:
+    """Compose LiGO operators ``op_a: cfg1→cfg2`` and ``op_b: cfg2→cfg3``
+    into the equivalent single-hop ``cfg1→cfg3`` operator.
+
+    Untied in-expanders (``<name>__in``, e.g. Net2Net's normalised fan-in
+    copies) compose role-wise: the in-role product is taken over each hop's
+    *in-resolved* matrix, falling back to the tied matrix when a hop has no
+    override.
+    """
+    S.check_growable(cfg1, cfg2)
+    S.check_growable(cfg2, cfg3)
+    wa, wb = op_a["width"], op_b["width"]
+    width: Dict[str, jax.Array] = {}
+    for name in sorted(n for n in wb if not n.endswith("__in")):
+        if name not in wa:
+            raise KeyError(f"width expander {name!r} missing from the "
+                           f"first-hop operator")
+        A, B = wa[name], wb[name]
+        if A.shape[0] != B.shape[1]:
+            raise ValueError(f"{name}: hop dims do not chain "
+                             f"({A.shape} then {B.shape})")
+        width[name] = _chain_matmul(B, A)
+        if f"{name}__in" in wa or f"{name}__in" in wb:
+            Ai = wa.get(f"{name}__in", A)
+            Bi = wb.get(f"{name}__in", B)
+            width[f"{name}__in"] = _chain_matmul(Bi, Ai)
+    depth: Dict[str, Any] = {}
+    da, db = op_a.get("depth", {}), op_b.get("depth", {})
+    c1, c2_, c3 = (_kind_counts(cfg1), _kind_counts(cfg2),
+                   _kind_counts(cfg3))
+    for kind in sorted(set(da) | set(db)):
+        ta, tb = da.get(kind), db.get(kind)
+        if ta is None or tb is None:
+            # one hop carries no blend for this kind — an implicit identity,
+            # only sound when that hop does not change the layer count
+            lo, hi = ((c1, c2_) if ta is None else (c2_, c3))
+            if lo.get(kind, 0) != hi.get(kind, 0):
+                raise ValueError(
+                    f"hop without a depth blend for kind {kind!r} changes "
+                    f"its layer count {lo.get(kind, 0)} -> "
+                    f"{hi.get(kind, 0)} — cannot compose through an "
+                    f"implicit identity")
+            depth[kind] = dict(tb if ta is None else ta)
+            continue
+        if sorted(ta) != sorted(tb):
+            raise ValueError(f"depth leaf sets differ for kind {kind!r}")
+        depth[kind] = {leaf: _chain_matmul(tb[leaf], ta[leaf])
+                       for leaf in ta}
+    return {"width": width, "depth": depth}
+
+
+def compose_chain(ops, cfgs) -> Dict:
+    """Fold a whole trajectory's operators ``[op₁₂, op₂₃, …]`` over the
+    config chain ``[cfg₁, cfg₂, …, cfg_N]`` into one ``cfg₁→cfg_N``
+    operator (a single-entry chain passes through unchanged)."""
+    if len(ops) != len(cfgs) - 1:
+        raise ValueError(f"{len(ops)} operators need {len(ops) + 1} configs, "
+                         f"got {len(cfgs)}")
+    if not ops:
+        raise ValueError("empty operator chain")
+    out = ops[0]
+    for i in range(1, len(ops)):
+        out = compose_ligo(out, ops[i], cfgs[0], cfgs[i], cfgs[i + 1])
+    return out

@@ -72,12 +72,16 @@ class Supervisor:
     def run(self, state: Dict[str, Any], step_fn: Callable,
             batch_at: Callable[[int], Any], *, start_step: int, steps: int,
             fail_at: Optional[Dict[int, Exception]] = None,
-            state_shardings=None, on_metrics=None) -> Dict[str, Any]:
+            state_shardings=None, on_metrics=None,
+            meta: Optional[Dict] = None) -> Dict[str, Any]:
         """Run the loop [start_step, steps) with recovery.
 
         ``state``: {"params":..., "opt":...}; ``step_fn(params, opt, batch,
         step) -> (params, opt, metrics)``. ``batch_at(step)`` must be
-        deterministic in ``step`` (replay safety).
+        deterministic in ``step`` (replay safety). ``meta`` (config identity,
+        trajectory stage, …) rides along on every checkpoint this loop
+        writes, so an elastic restart can validate what it is resuming and
+        land on the correct step/stage.
         """
         fail_at = dict(fail_at or {})
         step = start_step
@@ -98,7 +102,7 @@ class Supervisor:
                     on_metrics(step, metrics)
                 step += 1
                 if step % self.checkpoint_every == 0:
-                    self.mgr.save(step, state)
+                    self.mgr.save(step, state, meta)
             except KeyboardInterrupt:
                 raise
             except Exception as e:  # noqa: BLE001 — recover from any step fault
@@ -112,9 +116,12 @@ class Supervisor:
                     # no checkpoint yet: restart from the initial state
                     step = start_step
                     continue
-                state, meta = restored
-                step = meta["step"]
-        self.mgr.save(steps, state, block=True)
+                # NB: keep the restored meta in its own name — assigning to
+                # ``meta`` would stamp the *stale* restored dict (including
+                # its old "step") onto every later checkpoint this loop saves
+                state, restored_meta = restored
+                step = restored_meta["step"]
+        self.mgr.save(steps, state, meta, block=True)
         self.mgr.wait()
         return state
 

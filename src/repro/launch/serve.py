@@ -34,14 +34,50 @@ from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.model import decode_step, init_params, prefill
 
 
+def _target_chain(cfg, target: str, *, smoke: bool):
+    """Resolve a (possibly multi-hop) ``--grow-to`` spec into a config chain.
+
+    ``target`` is a comma-separated list of hops, each either a registry
+    arch name (smoke-reduced when serving in smoke mode) or ``"Nx"`` with N
+    a power of two — the *cumulative* grow_target multiple relative to the
+    most recent explicitly-named arch (the serving arch when none was
+    named), so ``2x,4x`` means base → grow_target(base) →
+    grow_target(grow_target(base)), and an arch-name hop restarts the
+    multiple at 1x of that arch.
+    """
+    chain, cur, cum = [], cfg, 1
+    for tok in target.split(","):
+        tok = tok.strip()
+        if tok.endswith("x") and tok[:-1].isdigit():
+            n = int(tok[:-1])
+            if n <= cum or n % cum or ((n // cum) & (n // cum - 1)):
+                raise SystemExit(
+                    f"--grow-to: '{tok}' after {cum}x — cumulative 'Nx' "
+                    f"hops must be increasing powers of two (e.g. 2x,4x)")
+            for _ in range((n // cum).bit_length() - 1):
+                cur = grow_target(cur)
+            cum = n
+        else:
+            cur = get_config(tok)
+            if smoke:
+                cur = smoke_config(cur)
+            cum = 1                     # 'Nx' counts restart at this arch
+        chain.append(cur)
+    return chain
+
+
 def hot_grow(params, cfg, target: str, *, smoke: bool = False, seed: int = 1,
              mesh=None):
-    """Grow ``params`` (cfg) to the ``target`` architecture at startup.
+    """Grow ``params`` (cfg) to the ``target`` architecture(s) at startup.
 
-    ``target`` is a registry arch name (reduced via ``smoke_config`` when
-    serving in smoke mode) or ``"2x"`` for ``grow_target(cfg)``. Returns
-    ``(grown_params, cfg2)``. Uses the memoised GrowthPlan executor, so the
-    growth itself is one compiled dispatch after the first call.
+    ``target`` is a single hop (registry arch name, or ``"2x"`` for
+    ``grow_target(cfg)``) or a comma-separated multi-hop list (e.g.
+    ``2x,4x`` — see :func:`_target_chain`). Multi-hop targets compose their
+    per-hop operators analytically (:func:`repro.core.compose_chain`) into
+    ONE ``cfg → final`` operator executed by a single fused GrowthPlan:
+    no intermediate model is ever materialised and no intermediate
+    checkpoint written. Returns ``(grown_params, final_cfg)``. The memoised
+    executor makes repeated growth of the same chain one compiled dispatch.
 
     ``mesh`` defaults to the ambient mesh (we run inside ``set_mesh`` in
     ``main``): the growth executes **sharded** — in/out shardings follow
@@ -49,25 +85,25 @@ def hot_grow(params, cfg, target: str, *, smoke: bool = False, seed: int = 1,
     tree lands already laid out for the sharded decode path and 8B+ targets
     never materialise on one device.
     """
-    from repro.core import init_ligo_params, plan_for
+    from repro.core import compose_chain, init_ligo_params, plan_for
     from repro.distributed.sharding import current_mesh
     if mesh is None:
         mesh = current_mesh()
-    if target == "2x":
-        cfg2 = grow_target(cfg)
-    else:
-        cfg2 = get_config(target)
-        if smoke:
-            cfg2 = smoke_config(cfg2)
-    ligo = init_ligo_params(jax.random.PRNGKey(seed), cfg, cfg2)
+    chain = [cfg] + _target_chain(cfg, target, smoke=smoke)
+    ops = [init_ligo_params(jax.random.PRNGKey(seed + i), a, b)
+           for i, (a, b) in enumerate(zip(chain[:-1], chain[1:]))]
+    ligo = compose_chain(ops, chain)
+    cfg2 = chain[-1]
     t0 = time.perf_counter()
     grown = plan_for(cfg, cfg2, params).executor(mesh=mesh)(ligo, params)
     jax.block_until_ready(jax.tree.leaves(grown)[0])
     ndev = 1 if mesh is None else mesh.size
+    hops = ("" if len(ops) == 1
+            else f" via {len(ops)} composed hops (one fused apply)")
     print(f"[serve] hot-grew {cfg.name} -> {cfg2.name} "
           f"({cfg.n_layers}L/{cfg.d_model}d -> {cfg2.n_layers}L/"
           f"{cfg2.d_model}d) on {ndev} device(s) in "
-          f"{(time.perf_counter() - t0) * 1e3:.1f} ms")
+          f"{(time.perf_counter() - t0) * 1e3:.1f} ms{hops}")
     return grown, cfg2
 
 
@@ -81,11 +117,14 @@ def main():
     ap.add_argument("--mesh", default="host",
                     choices=["host", "single", "multi"])
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--grow-to", default=None, metavar="ARCH",
+    ap.add_argument("--grow-to", default=None, metavar="ARCH[,ARCH...]",
                     help="hot-grow the checkpoint to this arch (or '2x' for "
                          "a doubled-depth/1.5x-width same-family target) at "
                          "startup via the cached GrowthPlan executor, then "
-                         "serve the grown model. Distributed growth: under "
+                         "serve the grown model. A comma-separated list "
+                         "(e.g. '2x,4x') chains hops: the per-hop operators "
+                         "compose into one fused apply — no intermediate "
+                         "models or checkpoints. Distributed growth: under "
                          "--mesh single|multi (or any ambient mesh) the "
                          "growth runs sharded — in/out shardings follow "
                          "params_pspecs, expanders replicated, the fused "

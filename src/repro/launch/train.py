@@ -6,11 +6,21 @@ fault-tolerant supervision.
     PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \\
         --grow-from half --method ligo --steps 200
 
+    # multi-stage scheduled growth (train→grow→train…, resumable):
+    PYTHONPATH=src python -m repro.launch.train \\
+        --trajectory examples/trajectory_smoke.json
+
     # production (TPU pod): same entrypoint with --mesh single|multi.
 
 The grow phase runs *under the same mesh* as training: Θ_small is restored
 (or pretrained in-line for the demo), the LiGO operator is trained with pjit
 for --ligo-steps, and the materialised Θ_large seeds the main loop.
+
+``--trajectory <cfg.json>`` hands the whole run to
+:class:`repro.trajectory.TrajectoryRunner`: an ordered stage schedule whose
+checkpoints carry (trajectory hash, stage, stage step), so a killed job
+relaunched with the same command resumes mid-trajectory at the correct
+stage — AdamW moments ride every hop through the growth operator.
 """
 from __future__ import annotations
 
@@ -20,20 +30,18 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import (TrainConfig, get_config, half_config, smoke_config)
 from repro import compat
 from repro.core import grow
 from repro.data import GlobalBatchLoader
-from repro.distributed.sharding import (batch_specs, named_shardings,
-                                        params_pspecs)
+from repro.distributed.sharding import named_shardings, params_pspecs
 from repro.distributed.supervisor import Supervisor
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.model import init_params
 from repro.optim import adamw_init
-from repro.training import make_train_step
+from repro.training import make_train_step, pjit_train_step
 
 
 def build_mesh(kind: str):
@@ -44,9 +52,16 @@ def build_mesh(kind: str):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--trajectory", default=None, metavar="CFG_JSON",
+                    help="run a multi-stage growth trajectory "
+                         "(train→grow→train…) from a JSON stage schedule; "
+                         "resumable mid-stage via --ckpt-dir")
+    ap.add_argument("--max-steps", type=int, default=None,
+                    help="trajectory only: stop (checkpointing) after this "
+                         "many global train steps — relaunch resumes")
     ap.add_argument("--grow-from", default=None,
                     help="'half' or an arch name: grow instead of cold start")
     ap.add_argument("--method", default="ligo",
@@ -68,6 +83,25 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.trajectory:
+        from repro.trajectory import TrajectoryConfig, TrajectoryRunner
+        traj = TrajectoryConfig.from_json(args.trajectory)
+        mesh = build_mesh(args.mesh)
+        print(f"[train] trajectory {traj.hash()}: "
+              f"{' -> '.join(st.cfg.name for st in traj.stages)} "
+              f"({traj.total_steps} steps) mesh={dict(mesh.shape)}")
+        res = TrajectoryRunner(traj, ckpt_dir=args.ckpt_dir,
+                               mesh=mesh).run(max_steps=args.max_steps)
+        print(f"[train] trajectory {res['status']}: stage "
+              f"{res['stage'] + 1}/{len(traj.stages)} ({res['cfg'].name}) "
+              f"global_step={res['global_step']} "
+              f"final_loss={res['history'][-1][2]:.4f}"
+              if res["history"] else
+              f"[train] trajectory {res['status']} (no steps run)")
+        return
+
+    if not args.arch:
+        raise SystemExit("--arch is required (or pass --trajectory)")
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
@@ -125,30 +159,43 @@ def main():
             params = init_params(cfg, jax.random.PRNGKey(args.seed))
 
         # ---- sharded training loop ---------------------------------------
-        pspecs = params_pspecs(params, model_size=model_sz, dp_size=dp_sz)
-        psh = named_shardings(pspecs, mesh)
-        params = jax.tree.map(jax.device_put, params, psh)
-        opt = adamw_init(params)
         step_fn = make_train_step(cfg, tcfg, act_spec=act_spec)
         loader = GlobalBatchLoader(cfg, mesh, args.batch, args.seq,
                                    seed=args.seed + 10)
-        b0 = loader.batch_at(0)
-        bsh = named_shardings(batch_specs(b0, dp_size=dp_sz), mesh)
-        osh = type(opt)(m=psh, v=psh, count=NamedSharding(mesh, P()))
-        jstep = jax.jit(step_fn, in_shardings=(psh, osh, bsh,
-                                               NamedSharding(mesh, P())),
-                        out_shardings=(psh, osh, None))
+        jstep, psh, osh = pjit_train_step(step_fn, params,
+                                          loader.batch_at(0), mesh)
+        params = jax.tree.map(jax.device_put, params, psh)
+        opt = adamw_init(params)
 
+        # checkpoints carry the run's identity; an elastic restart consumes
+        # the whole meta dict — refusing a checkpoint from a different arch
+        # (e.g. a reused --ckpt-dir) instead of crashing on shapes, and
+        # landing on the exact recorded step. The meta peek must happen
+        # BEFORE the restore: restore_latest unflattens into this arch's
+        # template and would die on the shape/key mismatch first.
+        run_meta = {"arch": cfg.name, "config": cfg.config_hash()}
         sup = Supervisor(ckpt_dir=args.ckpt_dir,
                          checkpoint_every=args.checkpoint_every)
+        meta = sup.mgr.latest_meta()
+        if meta is not None:
+            if "trajectory" in meta:
+                raise SystemExit(
+                    f"--ckpt-dir holds a trajectory checkpoint (stage "
+                    f"{meta.get('stage')}); resume it with --trajectory")
+            if meta.get("config", cfg.config_hash()) != cfg.config_hash():
+                raise SystemExit(
+                    f"--ckpt-dir holds a checkpoint of "
+                    f"{meta.get('arch', '?')} ({meta.get('config')}), not "
+                    f"{cfg.name} ({cfg.config_hash()}) — refusing to resume")
         restored = sup.resume({"params": params, "opt": opt},
                               shardings={"params": psh, "opt": osh})
         start = 0
         if restored is not None:
             state, meta = restored
             params, opt = state["params"], state["opt"]
-            start = meta["step"]
-            print(f"[train] resumed from step {start}")
+            start = int(meta.get("step", 0))
+            print(f"[train] resumed {meta.get('arch', cfg.name)} "
+                  f"from step {start}")
 
         def on_metrics(step, m):
             if step % 20 == 0:
@@ -160,7 +207,7 @@ def main():
                         lambda p, o, b, s: jstep(p, o, b, jnp.asarray(s)),
                         loader.batch_at, start_step=start, steps=args.steps,
                         state_shardings={"params": psh, "opt": osh},
-                        on_metrics=on_metrics)
+                        on_metrics=on_metrics, meta=run_meta)
         final = sup.history[-1][1] if sup.history else float("nan")
         print(f"[train] done: steps={args.steps} final_loss={final:.4f} "
               f"stragglers={len(sup.watchdog.flagged)} "

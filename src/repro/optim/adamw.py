@@ -21,8 +21,15 @@ class AdamWState(NamedTuple):
     count: jax.Array
 
 
-def _decay_mask(params: Params) -> Params:
-    """No weight decay on vectors/scalars (norm scales, biases, gates)."""
+def decay_mask(params: Params) -> Params:
+    """No weight decay on vectors/scalars (norm scales, biases, gates).
+
+    Deliberately *not* part of :class:`AdamWState`: the mask is a pure
+    function of the current parameter tree, recomputed every update — so
+    when a growth hop swaps the tree for a larger architecture
+    (:func:`repro.optim.grow_adamw_state`), the grown run's mask is rebuilt
+    for the new shapes automatically instead of being restored stale.
+    """
     return jax.tree.map(lambda p: p.ndim >= 2, params)
 
 
@@ -40,7 +47,7 @@ def adamw_update(grads: Params, state: AdamWState, params: Params, *,
     count = state.count + 1
     c1 = 1.0 - b1 ** count.astype(jnp.float32)
     c2 = 1.0 - b2 ** count.astype(jnp.float32)
-    mask = _decay_mask(params)
+    mask = decay_mask(params)
 
     def upd(g, m, v, p, decay):
         gf = g.astype(jnp.float32)

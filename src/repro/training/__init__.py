@@ -1,4 +1,6 @@
 from repro.training.trainer import (init_train_state, make_eval_step,
-                                    make_train_step)
+                                    make_train_step, pjit_train_step,
+                                    train_state_shardings)
 
-__all__ = ["make_train_step", "make_eval_step", "init_train_state"]
+__all__ = ["make_train_step", "make_eval_step", "init_train_state",
+           "pjit_train_step", "train_state_shardings"]

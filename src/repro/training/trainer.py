@@ -93,3 +93,48 @@ def init_train_state(cfg: ModelConfig, key) -> Tuple[Params, Any]:
     from repro.models.model import init_params
     params = init_params(cfg, key)
     return params, adamw_init(params)
+
+
+def train_state_shardings(params: Params, mesh) -> Tuple[Any, Any]:
+    """(param, AdamW-state) ``NamedSharding`` trees for a mesh.
+
+    The optimizer moments shard exactly like the parameters (ZeRO falls out
+    of FSDP) and the schedule count rides replicated. ``params`` may be a
+    ``ShapeDtypeStruct`` template — only shapes/ndims are read — which is
+    what lets a resuming job (launch/train.py, repro.trajectory) build its
+    restore shardings before any array exists.
+    """
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.optim import AdamWState
+    from repro.distributed.sharding import named_shardings, params_pspecs
+    model_sz = mesh.shape.get("model", 1)
+    dp_sz = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    psh = named_shardings(
+        params_pspecs(params, model_size=model_sz, dp_size=dp_sz), mesh)
+    osh = AdamWState(m=psh, v=psh, count=NamedSharding(mesh, P()))
+    return psh, osh
+
+
+def pjit_train_step(step_fn: Callable, params: Params, batch, mesh
+                    ) -> Tuple[Callable, Any, Any]:
+    """jit ``step_fn(params, opt, batch, step)`` with full mesh shardings.
+
+    Returns ``(jitted_step, param_shardings, opt_shardings)`` — the one
+    pjit recipe shared by the single-arch driver (launch/train.py) and the
+    trajectory runner: train state via :func:`train_state_shardings`, the
+    batch's leading dim over the data(+pod) axes, the step index
+    replicated.
+    """
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import batch_specs, named_shardings
+    psh, osh = train_state_shardings(params, mesh)
+    dp_sz = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    bsh = named_shardings(batch_specs(batch, dp_size=dp_sz), mesh)
+    jstep = jax.jit(step_fn,
+                    in_shardings=(psh, osh, bsh, NamedSharding(mesh, P())),
+                    out_shardings=(psh, osh, None))
+    return jstep, psh, osh

@@ -1,0 +1,78 @@
+"""Growth trajectories: scheduled multi-stage training (train→grow→train…).
+
+The paper trains through a single small→large LiGO hop. Production-scale
+reuse of checkpoints is a *schedule* of hops — small→mid→…→large interleaved
+with normal training ("Stacking Your Transformers", Du et al. 2024), each hop
+carrying optimizer state losslessly so training resumes without a loss spike
+("LEMON", Wang et al. 2023). This package chains the repo's pieces (compiled
+sharded GrowthPlan, fused kernels, elastic checkpoints) into that subsystem.
+
+Walkthrough — the stage-config format
+-------------------------------------
+A trajectory is an ordered tuple of stages. Stage 0 is the cold-started
+source; every later stage says how it is *entered* (a :class:`GrowthSpec`)
+and how long it trains::
+
+    from repro.trajectory import GrowthSpec, Stage, TrajectoryConfig
+
+    traj = TrajectoryConfig(stages=(
+        Stage(cfg=small_cfg, steps=400),
+        Stage(cfg=mid_cfg,   steps=400,
+              growth=GrowthSpec(method="ligo", ligo_steps=100)),
+        Stage(cfg=big_cfg,   steps=800,
+              growth=GrowthSpec(method="ligo", ligo_steps=100)),
+    ), batch=32, seq=128, lr=1e-3, checkpoint_every=100)
+
+or, from the CLI, a JSON file (``launch/train.py --trajectory cfg.json``;
+schema documented in :mod:`repro.trajectory.config`) whose stages resolve
+relative to a base arch (``"half"``, ``"grow": "2x"``, or explicit registry
+names). Consecutive stages must satisfy ``spec.check_growable``.
+
+``TrajectoryRunner(traj, ckpt_dir=..., mesh=...).run()`` executes the whole
+schedule as one resumable job: each checkpoint's meta records
+``(trajectory_hash, stage, stage_step, global_step, arch)``, so a killed job
+restarted with the same config resumes at the exact stage and step — on any
+mesh, since restore shardings are rebuilt from the stage's own template. A
+post-growth snapshot at every stage entry means a finished hop (including
+its LiGO SGD phase) is never recomputed.
+
+Optimizer-state semantics per method
+------------------------------------
+Every hop grows the AdamW state through the same operator as the weights
+(:func:`repro.optim.grow_adamw_state`; disable with
+``GrowthSpec(grow_optimizer=False)``):
+
+- **first moment** ``m`` — gradients pull back linearly through a linear
+  reparametrisation, so ``m`` rides the operator exactly as the weights do
+  (``apply_ligo``). For *selection* methods (stackbert / interpolation /
+  net2net / bert2bert one-hot factors) this is plain moment copying into the
+  duplicated layers/neurons; for learned **ligo** expanders it is the
+  corresponding linear blend.
+- **second moment** ``v`` — an EMA of squared gradients, so it rides the
+  *elementwise-squared* resolved operator (``apply_ligo(..., square=True)``:
+  squared leaf expanders, squared depth blends — resolve-then-square, which
+  is what makes GQA's ``gamma`` averaging come out right). One-hot factors
+  square to themselves (v copies, LEMON-style); net2net's normalised fan-in
+  in-expanders square to ``1/c²`` weights; grown ``v`` is always ≥ 0.
+- **schedule count** — carried over unchanged, so bias correction and
+  count-keyed schedules continue instead of re-warming.
+- **weight-decay mask** — not state; rebuilt from the grown tree by
+  ``adamw_update`` each step.
+- **random** — no operator exists; the stage starts from ``adamw_init``.
+
+Skip-stage growth: the per-hop operators compose analytically
+(:func:`repro.core.compose_chain` — width factors as matrix products, depth
+patterns chained), so any stage-A→stage-C mapping is available as a single
+fused GrowthPlan without materialising intermediates (used by
+``serve --grow-to a,b,c`` and for restarts that jump stages). Caveat: that
+exactness covers the linear map (parameters, ``m``) only — squaring a
+composed dense/GQA operator is not the composition of the squared hops, so
+second moments should ride each hop individually when LEMON-exact ``v``
+matters (the runner always grows per hop; only skip-stage shortcuts face
+this).
+"""
+from repro.trajectory.config import GrowthSpec, Stage, TrajectoryConfig
+from repro.trajectory.runner import TrajectoryRunner, run_trajectory
+
+__all__ = ["GrowthSpec", "Stage", "TrajectoryConfig", "TrajectoryRunner",
+           "run_trajectory"]

@@ -1,0 +1,164 @@
+"""Trajectory configuration: an ordered schedule of train→grow→train stages.
+
+A :class:`TrajectoryConfig` is the static description of a whole multi-stage
+run: which architecture each stage trains, for how many steps, and how each
+stage is *entered* — the growth method and its LiGO budget. It is pure data
+(hashable, JSON-round-trippable): the runner derives everything else from it,
+and its :meth:`TrajectoryConfig.hash` is stamped into every checkpoint so a
+resume can refuse state from a different schedule.
+
+JSON format (``launch/train.py --trajectory cfg.json``)::
+
+    {
+      "arch": "llama3-8b",        # base registry arch
+      "smoke": true,              # reduce via smoke_config (CPU-runnable)
+      "batch": 8, "seq": 64, "lr": 1e-3, "checkpoint_every": 20, "seed": 0,
+      "stages": [
+        {"steps": 40, "arch": "half"},                  # stage 0: source
+        {"steps": 40, "grow": "2x", "method": "ligo",   # grow INTO stage 1
+         "ligo_steps": 10},
+        {"steps": 40, "grow": "2x", "method": "stackbert"}
+      ]
+    }
+
+Per-stage arch resolution: stage 0 defaults to the base arch; ``"half"``
+takes ``half_config`` of the base; any other name hits the registry (smoke-
+reduced when ``smoke``). Later stages default to ``"grow": "2x"`` —
+``grow_target`` of the *previous* stage's config — or name an explicit
+registry arch. Every consecutive pair must satisfy ``check_growable``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core import spec as S
+
+
+@dataclass(frozen=True)
+class GrowthSpec:
+    """How a stage is entered from the previous one."""
+    method: str = "ligo"        # ligo | stackbert | interpolation |
+    #                             net2net | bert2bert | random
+    ligo_steps: int = 100       # SGD steps on the operator (ligo only)
+    ligo_lr: float = 1e-3
+    ligo_momentum: float = 0.9
+    grow_optimizer: bool = True  # carry AdamW moments through the operator
+
+
+@dataclass(frozen=True)
+class Stage:
+    """One trajectory stage: an architecture trained for ``steps`` steps.
+
+    ``growth`` describes the hop *into* this stage; it is None exactly for
+    stage 0 (the cold-started source model).
+    """
+    cfg: ModelConfig
+    steps: int
+    growth: Optional[GrowthSpec] = None
+
+
+@dataclass(frozen=True)
+class TrajectoryConfig:
+    stages: Tuple[Stage, ...]
+    batch: int = 8
+    seq: int = 64
+    lr: float = 1e-3
+    checkpoint_every: int = 50
+    seed: int = 0
+
+    def __post_init__(self):
+        if not self.stages:
+            raise ValueError("a trajectory needs at least one stage")
+        if self.stages[0].growth is not None:
+            raise ValueError("stage 0 is the source model; it has no "
+                             "growth hop")
+        for i in range(1, len(self.stages)):
+            if self.stages[i].growth is None:
+                raise ValueError(f"stage {i} must carry a GrowthSpec")
+            S.check_growable(self.stages[i - 1].cfg, self.stages[i].cfg)
+
+    # ------------------------------------------------------------------
+    @property
+    def total_steps(self) -> int:
+        return sum(st.steps for st in self.stages)
+
+    def stage_bounds(self) -> Tuple[Tuple[int, int], ...]:
+        """[start, end) global-step interval of each stage."""
+        out, start = [], 0
+        for st in self.stages:
+            out.append((start, start + st.steps))
+            start += st.steps
+        return tuple(out)
+
+    def hash(self) -> str:
+        """Schedule identity, stamped into checkpoint meta by the runner."""
+        blob = json.dumps({
+            "stages": [{
+                "cfg": st.cfg.config_hash(), "steps": st.steps,
+                "growth": (None if st.growth is None
+                           else dataclasses.asdict(st.growth)),
+            } for st in self.stages],
+            **{k: getattr(self, k) for k in ("batch", "seq", "lr",
+                                             "checkpoint_every", "seed")},
+        }, sort_keys=True)
+        return hashlib.sha1(blob.encode()).hexdigest()[:12]
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def from_json(src: Any) -> "TrajectoryConfig":
+        """Build from a JSON file path or an already-parsed dict."""
+        from repro.configs import (get_config, grow_target, half_config,
+                                   smoke_config)
+        if isinstance(src, str):
+            with open(src) as f:
+                obj = json.load(f)
+        else:
+            obj = dict(src)
+        base = get_config(obj["arch"])
+        smoke = bool(obj.get("smoke", False))
+        if smoke:
+            base = smoke_config(base)
+
+        def resolve(entry: Dict, prev: Optional[ModelConfig]) -> ModelConfig:
+            if prev is None:                         # stage 0
+                name = entry.get("arch")
+                if name in (None, "base"):
+                    return base
+                if name == "half":
+                    return half_config(base)
+                cfg = get_config(name)
+                return smoke_config(cfg) if smoke else cfg
+            if "arch" in entry:
+                cfg = get_config(entry["arch"])
+                return smoke_config(cfg) if smoke else cfg
+            tok = entry.get("grow", "2x")
+            if tok != "2x":
+                raise ValueError(f"unknown grow token {tok!r} "
+                                 "(use '2x' or an explicit 'arch')")
+            return grow_target(prev)
+
+        stages, prev = [], None
+        for i, entry in enumerate(obj["stages"]):
+            cfg = resolve(entry, prev)
+            growth = None
+            if i > 0:
+                growth = GrowthSpec(
+                    method=entry.get("method", "ligo"),
+                    ligo_steps=int(entry.get("ligo_steps", 100)),
+                    ligo_lr=float(entry.get("ligo_lr", 1e-3)),
+                    ligo_momentum=float(entry.get("ligo_momentum", 0.9)),
+                    grow_optimizer=bool(entry.get("grow_optimizer", True)))
+            stages.append(Stage(cfg=cfg, steps=int(entry["steps"]),
+                                growth=growth))
+            prev = cfg
+        return TrajectoryConfig(
+            stages=tuple(stages),
+            batch=int(obj.get("batch", 8)), seq=int(obj.get("seq", 64)),
+            lr=float(obj.get("lr", 1e-3)),
+            checkpoint_every=int(obj.get("checkpoint_every", 50)),
+            seed=int(obj.get("seed", 0)))

@@ -1,0 +1,229 @@
+"""TrajectoryRunner: execute train→grow→train… as one resumable job.
+
+One runner call drives a whole :class:`~repro.trajectory.config.
+TrajectoryConfig`: pretrain stage 0, grow into stage 1 (operator learned or
+built per the stage's :class:`GrowthSpec`, parameters AND AdamW moments
+carried through it), train stage 1, grow again, … Every leg runs under the
+runner's mesh (or the ambient one): growth goes through the sharded
+GrowthPlan executor, training through a pjit'd train step with
+``params_pspecs`` shardings, so the same code covers the 1-device CPU smoke
+and a production pod.
+
+Resumability: every checkpoint the runner writes carries
+``{trajectory, stage, stage_step, global_step, arch, config}`` in its meta.
+A fresh runner pointed at the same directory peeks the meta first
+(:meth:`CheckpointManager.latest_meta` — arrays untouched), validates the
+trajectory hash, rebuilds the *stage-correct* template and mesh shardings,
+and restores into them — so a job killed mid-stage resumes at the exact
+(stage, step) it died on, on any device count. A post-growth snapshot is
+written at every stage entry, so a completed (possibly expensive) growth is
+never redone on restart.
+
+``run(max_steps=N)`` stops after N global train steps (checkpointing first)
+— the deterministic "kill" used by the tests and the CI smoke; calling
+``run()`` again on a new runner finishes the job.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import nullcontext
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import TrainConfig
+from repro.core import grow
+from repro.data import GlobalBatchLoader
+from repro.models.model import init_params
+from repro.optim import adamw_init
+from repro.trajectory.config import TrajectoryConfig
+from repro.training import (make_train_step, pjit_train_step,
+                            train_state_shardings)
+
+
+class TrajectoryRunner:
+    def __init__(self, traj: TrajectoryConfig, *, ckpt_dir: str,
+                 mesh=None, keep: int = 3, verbose: bool = True):
+        self.traj = traj
+        self.mgr = CheckpointManager(ckpt_dir, keep=keep)
+        self.mesh = mesh
+        self.verbose = verbose
+        self.resumed_at: Optional[Tuple[int, int]] = None
+
+    # ------------------------------------------------------------------
+    def _log(self, msg: str) -> None:
+        if self.verbose:
+            print(f"[traj] {msg}", flush=True)
+
+    def _meta(self, stage: int, stage_step: int, global_step: int) -> Dict:
+        cfg = self.traj.stages[stage].cfg
+        return {"trajectory": self.traj.hash(), "stage": stage,
+                "stage_step": stage_step, "global_step": global_step,
+                "arch": cfg.name, "config": cfg.config_hash()}
+
+    def _template(self, stage: int):
+        cfg = self.traj.stages[stage].cfg
+        params_t = jax.eval_shape(
+            lambda: init_params(cfg, jax.random.PRNGKey(self.traj.seed)))
+        opt_t = jax.eval_shape(adamw_init, params_t)
+        return {"params": params_t, "opt": opt_t}
+
+    def _shardings(self, template_params):
+        if self.mesh is None:
+            return None, None
+        return train_state_shardings(template_params, self.mesh)
+
+    # ------------------------------------------------------------------
+    def _restore_or_init(self):
+        meta = self.mgr.latest_meta()
+        if meta is None:
+            cfg0 = self.traj.stages[0].cfg
+            params = init_params(cfg0, jax.random.PRNGKey(self.traj.seed))
+            return 0, 0, params, adamw_init(params)
+        if meta.get("trajectory") != self.traj.hash():
+            raise ValueError(
+                f"checkpoint dir {self.mgr.dir!r} belongs to trajectory "
+                f"{meta.get('trajectory')!r}, not {self.traj.hash()!r} — "
+                "refusing to resume a different schedule")
+        stage, k = int(meta["stage"]), int(meta["stage_step"])
+        tmpl = self._template(stage)
+        psh, osh = self._shardings(tmpl["params"])
+        shardings = (None if psh is None
+                     else {"params": psh, "opt": osh})
+        state, _ = self.mgr.restore(self.mgr.latest_step(), tmpl, shardings)
+        self.resumed_at = (stage, k)
+        self._log(f"resumed trajectory {self.traj.hash()} at stage {stage} "
+                  f"step {k} ({meta['arch']})")
+        return stage, k, state["params"], state["opt"]
+
+    # ------------------------------------------------------------------
+    def _stage_step_fn(self, stage: int, params):
+        """(jitted step, loader, shardings) for one stage's train leg."""
+        st = self.traj.stages[stage]
+        tcfg = TrainConfig(steps=st.steps,
+                           warmup_steps=max(st.steps // 10, 1),
+                           lr=self.traj.lr, seq_len=self.traj.seq,
+                           global_batch=self.traj.batch)
+        step_fn = make_train_step(st.cfg, tcfg)
+        loader = GlobalBatchLoader(st.cfg, self.mesh, self.traj.batch,
+                                   self.traj.seq,
+                                   seed=self.traj.seed + 101 * stage)
+        if self.mesh is None:
+            return jax.jit(step_fn), loader, None, None
+        jstep, psh, osh = pjit_train_step(step_fn, params,
+                                          loader.batch_at(0), self.mesh)
+        return jstep, loader, psh, osh
+
+    def _grow_into(self, stage: int, params, opt):
+        """Hop stage-1 → stage: params and AdamW moments through the
+        operator (``grow_optimizer``), fresh moments otherwise."""
+        st = self.traj.stages[stage]
+        gs = st.growth
+        prev_cfg = self.traj.stages[stage - 1].cfg
+        g_loader = GlobalBatchLoader(prev_cfg, self.mesh, self.traj.batch,
+                                     self.traj.seq,
+                                     seed=self.traj.seed + 101 * stage + 53)
+        t0 = time.perf_counter()
+        params, info = grow(
+            params, prev_cfg, st.cfg, method=gs.method,
+            key=jax.random.PRNGKey(self.traj.seed + 7 * stage),
+            data_it=iter(g_loader), ligo_steps=gs.ligo_steps,
+            ligo_lr=gs.ligo_lr, ligo_momentum=gs.ligo_momentum,
+            opt_state=opt, grow_optimizer=gs.grow_optimizer)
+        opt = info["opt_state"]
+        jax.block_until_ready(jax.tree.leaves(params)[0])
+        grow_ms = (time.perf_counter() - t0) * 1e3
+        self._log(f"grew {prev_cfg.name} -> {st.cfg.name} "
+                  f"(method={gs.method}, opt moments "
+                  f"{'carried' if gs.grow_optimizer and gs.method != 'random' else 'reset'}) "
+                  f"in {grow_ms:.0f} ms")
+        return params, opt, grow_ms
+
+    # ------------------------------------------------------------------
+    def run(self, *, max_steps: Optional[int] = None,
+            on_metrics=None) -> Dict[str, Any]:
+        """Drive the trajectory to completion (or to ``max_steps`` global
+        train steps). Returns the final state + bookkeeping; ``status`` is
+        ``"done"`` or ``"paused"``."""
+        ctx = (compat.set_mesh(self.mesh) if self.mesh is not None
+               else nullcontext())
+        with ctx:
+            return self._run(max_steps, on_metrics)
+
+    def _run(self, max_steps, on_metrics) -> Dict[str, Any]:
+        stages = self.traj.stages
+        bounds = self.traj.stage_bounds()
+        stage, k, params, opt = self._restore_or_init()
+        global_step = bounds[stage][0] + k
+        history: list = []
+        timings: Dict[int, Dict[str, float]] = {}
+
+        def timing(s: int) -> Dict[str, float]:
+            return timings.setdefault(s, {"train_ms": 0.0, "grow_ms": 0.0})
+
+        def save(s: int, kk: int, g: int, *, block: bool = False) -> None:
+            self.mgr.save(g, {"params": params, "opt": opt},
+                          self._meta(s, kk, g), block=block)
+
+        def result(status: str) -> Dict[str, Any]:
+            self.mgr.wait()
+            return {"params": params, "opt": opt,
+                    "cfg": stages[stage].cfg, "stage": stage,
+                    "stage_step": k, "global_step": global_step,
+                    "history": history, "status": status,
+                    "resumed_at": self.resumed_at, "timings": timings}
+
+        while True:
+            st = stages[stage]
+            if k < st.steps:
+                self._log(f"stage {stage + 1}/{len(stages)}: {st.cfg.name} "
+                          f"({st.cfg.param_count() / 1e6:.1f}M) "
+                          f"steps [{k}, {st.steps})")
+                t_train = time.perf_counter()
+                jstep, loader, psh, osh = self._stage_step_fn(stage, params)
+                if psh is not None:
+                    params = jax.tree.map(jax.device_put, params, psh)
+                    opt = jax.tree.map(jax.device_put, opt, osh)
+                while k < st.steps:
+                    if max_steps is not None and global_step >= max_steps:
+                        timing(stage)["train_ms"] += (time.perf_counter()
+                                                      - t_train) * 1e3
+                        save(stage, k, global_step, block=True)
+                        self._log(f"paused at global step {global_step} "
+                                  f"(stage {stage} step {k})")
+                        return result("paused")
+                    batch = loader.batch_at(k)
+                    params, opt, m = jstep(params, opt, batch,
+                                           jnp.asarray(k))
+                    k += 1
+                    global_step += 1
+                    history.append((global_step, stage, float(m["total"])))
+                    if on_metrics is not None:
+                        on_metrics(global_step, stage, m)
+                    if (k % self.traj.checkpoint_every == 0
+                            or k == st.steps):
+                        save(stage, k, global_step)
+                timing(stage)["train_ms"] += (time.perf_counter()
+                                              - t_train) * 1e3
+                self._log(f"stage {stage + 1} done: "
+                          f"loss {history[-1][2]:.4f}")
+            if stage + 1 == len(stages):
+                save(stage, k, global_step, block=True)
+                return result("done")
+            params, opt, grow_ms = self._grow_into(stage + 1, params, opt)
+            timing(stage + 1)["grow_ms"] = grow_ms
+            stage, k = stage + 1, 0
+            # post-growth snapshot (same global step, new stage meta):
+            # replaces the stage-end save, so a restart never redoes the hop
+            save(stage, 0, global_step, block=True)
+
+
+def run_trajectory(traj: TrajectoryConfig, *, ckpt_dir: str, mesh=None,
+                   max_steps: Optional[int] = None,
+                   verbose: bool = True) -> Dict[str, Any]:
+    """One-shot convenience wrapper around :class:`TrajectoryRunner`."""
+    return TrajectoryRunner(traj, ckpt_dir=ckpt_dir, mesh=mesh,
+                            verbose=verbose).run(max_steps=max_steps)

@@ -98,6 +98,38 @@ def test_serve_hot_grow_smoke(monkeypatch, capsys):
     assert "tok/s" in out          # decode ran on the grown model
 
 
+def test_serve_hot_grow_multihop_composed(monkeypatch, capsys):
+    """--grow-to with a multi-hop list ('2x,4x') routes through the composed
+    operator: ONE fused plan apply to the final arch (no intermediate
+    model), and the result equals growing hop-by-hop."""
+    import sys
+    from repro.configs import get_config, grow_target, smoke_config
+    from repro.core import apply_ligo, init_ligo_params
+    from repro.launch import serve
+    monkeypatch.setattr(sys, "argv", [
+        "serve", "--arch", "llama3-8b", "--smoke", "--grow-to", "2x,4x",
+        "--batch", "1", "--prompt-len", "8", "--gen", "3"])
+    serve.main()
+    out = capsys.readouterr().out
+    assert "via 2 composed hops (one fused apply)" in out
+    assert "-grown-grown" in out and "tok/s" in out
+
+    # composed hot_grow == sequential hop-by-hop growth (same seeds)
+    cfg = smoke_config(get_config("llama3-8b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    grown, cfg2 = serve.hot_grow(params, cfg, "2x,4x", smoke=True)
+    mid_cfg = grow_target(cfg)
+    assert cfg2.name == grow_target(mid_cfg).name
+    mid = apply_ligo(init_ligo_params(jax.random.PRNGKey(1), cfg, mid_cfg),
+                     params, cfg, mid_cfg)
+    want = apply_ligo(
+        init_ligo_params(jax.random.PRNGKey(2), mid_cfg, cfg2),
+        mid, mid_cfg, cfg2)
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(grown)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5)
+
+
 def test_training_converges_toward_process_entropy():
     cfg = TINY_GPT.scaled(name="conv", d_model=64, d_head=16, d_ff=128,
                           vocab_size=128)
