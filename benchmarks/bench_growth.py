@@ -24,7 +24,11 @@ growth-trajectory subsystem: composed-vs-sequential multi-hop apply (one
 fused A→C plan of the analytically composed operator vs hop-by-hop with the
 intermediate model materialised) and per-stage wall times of a tiny 3-stage
 train→grow→train trajectory (growth legs include AdamW-moment growth through
-the squared operator). Emits ``BENCH_growth.json`` (name, wall-time, est.
+the squared operator). Plus the autogrow subsystem: the elastic
+(chunked + carry-checkpointed) LiGO phase vs the monolithic scan — the
+overhead of making the hop killable, acceptance ≤5% — and the adaptive
+controller's per-step decision cost + an end-to-end auto-scheduled
+trajectory. Emits ``BENCH_growth.json`` (name, wall-time, est.
 HBM bytes) at the repo root so future PRs have a perf trajectory.
 """
 from __future__ import annotations
@@ -660,6 +664,139 @@ def _bench_trajectory(entries: List[Dict], speedups: Dict,
     }
 
 
+def _bench_elastic_ligo(entries: List[Dict], speedups: Dict,
+                        steps: int = 32, chunk: int = 8) -> None:
+    """The elastic (chunked + carry-checkpointed) LiGO phase vs the
+    monolithic single-scan phase — the cost of making the hop killable.
+
+    Both legs run the full cold phase (compile + steps) from the same
+    operator init on the same batch stream; the elastic leg checkpoints the
+    ``(ligo, momentum)`` carry after every chunk through a real
+    CheckpointManager (async writes). The acceptance bar is ≤5% overhead;
+    the parity of the two final operators is recorded alongside."""
+    import tempfile
+    from benchmarks.growth_lab import _batches
+    from repro.checkpoint import CheckpointManager
+    from repro.core import init_ligo_params, train_ligo
+    from repro.models import init_params
+
+    lab = dataclasses.replace(LabConfig(), batch=8, seq=32)
+    c1, c2 = lab.small, lab.big
+    sp = init_params(c1, jax.random.PRNGKey(0))
+    lg = init_ligo_params(jax.random.PRNGKey(1), c1, c2)
+    it = _batches(c1, lab, 0, lab.seed)
+    pre = [next(it) for _ in range(steps)]
+
+    out_ops: Dict[str, Any] = {}
+
+    def run_mono():
+        op, _ = train_ligo(lg, sp, c1, c2, iter(pre), steps=steps,
+                           scan_chunk=steps)
+        jax.block_until_ready(jax.tree.leaves(op)[0])
+        out_ops["mono"] = op
+
+    def run_elastic():
+        with tempfile.TemporaryDirectory() as d:
+            op, _ = train_ligo(lg, sp, c1, c2, iter(pre), steps=steps,
+                               scan_chunk=chunk,
+                               phase_ckpt=CheckpointManager(d))
+            jax.block_until_ready(jax.tree.leaves(op)[0])
+        out_ops["elastic"] = op
+
+    mono_t, elast_t = [], []
+    for _ in range(3):
+        jax.clear_caches()
+        t0 = time.perf_counter()
+        run_mono()
+        mono_t.append(time.perf_counter() - t0)
+        jax.clear_caches()
+        t0 = time.perf_counter()
+        run_elastic()
+        elast_t.append(time.perf_counter() - t0)
+    mono_ms = min(mono_t) * 1e3
+    elast_ms = min(elast_t) * 1e3
+
+    import numpy as np
+    parity = max(
+        float(np.abs(np.asarray(a) - np.asarray(b)).max()
+              / (np.abs(np.asarray(b)).max() + 1e-30))
+        for a, b in zip(jax.tree.leaves(out_ops["elastic"]),
+                        jax.tree.leaves(out_ops["mono"])))
+
+    entries.extend([
+        {"name": f"ligo_phase[proxy]/monolithic_scan",
+         "wall_ms": round(mono_ms, 3), "est_hbm_bytes": None,
+         "note": f"full {steps}-step phase as ONE lax.scan program "
+                 "(compile + steps); a kill redoes the whole phase"},
+        {"name": f"ligo_phase[proxy]/chunked_elastic",
+         "wall_ms": round(elast_ms, 3), "est_hbm_bytes": None,
+         "note": f"same phase as {steps // chunk} scan legs of {chunk} "
+                 "steps, (ligo, momentum, step) carry checkpointed (async) "
+                 "at every chunk boundary — a kill resumes mid-phase"},
+    ])
+    speedups["ligo_phase_elastic"] = {
+        "chunked_overhead": round(elast_ms / mono_ms, 3),
+        "parity_max_rel": parity,
+        "steps": steps, "chunk": chunk,
+    }
+
+
+def _bench_autogrow(entries: List[Dict], speedups: Dict,
+                    decisions: int = 5000) -> None:
+    """Controller overhead: the per-train-step cost of feeding telemetry +
+    evaluating the growth policy (pure host python — it must vanish next to
+    a jitted train step), plus a tiny end-to-end auto-scheduled trajectory
+    showing the stage ending at the plateau instead of the cap."""
+    import math
+    import tempfile
+    from repro.autogrow import PolicySpec, make_policy
+    from repro.trajectory import (GrowthSpec, Stage, TrajectoryConfig,
+                                  TrajectoryRunner)
+
+    spec = PolicySpec(kind="rpf_decay", max_steps=10 ** 9, min_steps=10,
+                      window=32, decay=0.25)
+    pol = make_policy(spec)
+    tele = pol.telemetry(flops_per_step=1e12, tokens_per_step=4096)
+    t0 = time.perf_counter()
+    for t in range(decisions):
+        tele.record(t, 1.0 + math.exp(-t / 1e6))
+        pol.should_grow(t, tele)
+    per_step_ms = (time.perf_counter() - t0) / decisions * 1e3
+
+    cap = 24
+    traj = TrajectoryConfig(stages=(
+        Stage(PROXY_SMALL, 6),
+        Stage(PROXY_MID, None, GrowthSpec(method="ligo", ligo_steps=4),
+              policy=PolicySpec(kind="loss_plateau", max_steps=cap,
+                                min_steps=2, window=4, tol=5e-3,
+                                ema_halflife=2))),
+        batch=8, seq=32, lr=1e-3, checkpoint_every=cap)
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as d:
+        res = TrajectoryRunner(traj, ckpt_dir=d, verbose=False).run()
+    auto_s = time.perf_counter() - t0
+    fired = (res["decisions"][-1]["stage_step"] if res["decisions"]
+             else cap)
+
+    entries.extend([
+        {"name": "autogrow[controller]/decision_per_step",
+         "wall_ms": round(per_step_ms, 6), "est_hbm_bytes": None,
+         "note": f"telemetry record + policy evaluation per train step "
+                 f"(rpf_decay, window 32; median over {decisions} host-side "
+                 "decisions) — the controller's whole per-step cost"},
+        {"name": "autogrow[proxy,2stage]/auto_trajectory",
+         "wall_ms": round(auto_s * 1e3, 3), "est_hbm_bytes": None,
+         "note": f"end-to-end auto-scheduled trajectory: plateau policy "
+                 f"ended the grown stage at step {fired} of a {cap}-step "
+                 "cap (train legs incl. compile, LiGO hop, moment growth)"},
+    ])
+    speedups["autogrow"] = {
+        "decision_per_step_ms": round(per_step_ms, 6),
+        "auto_stage_fired_at": fired,
+        "auto_stage_cap": cap,
+    }
+
+
 def engine_bench(quick: bool = False, out_path: Optional[str] = None) -> Dict:
     """Time plan vs legacy apply_ligo + a train_ligo step; write
     BENCH_growth.json. ``quick`` skips the full-size BERT pair."""
@@ -677,6 +814,10 @@ def engine_bench(quick: bool = False, out_path: Optional[str] = None) -> Dict:
     _bench_train_step(entries, speedups, steps=10 if quick else 30)
     _bench_compose(entries, speedups, iters=6 if quick else 12)
     _bench_trajectory(entries, speedups, steps=4 if quick else 8)
+    _bench_elastic_ligo(entries, speedups, steps=16 if quick else 32,
+                        chunk=4 if quick else 8)
+    _bench_autogrow(entries, speedups,
+                    decisions=1000 if quick else 5000)
     out = {
         "backend": jax.default_backend(),
         "pallas_leg": "excluded on CPU (interpret mode is not a timing "

@@ -1,0 +1,28 @@
+"""repro.autogrow — the adaptive growth controller.
+
+Turns the static ``TrajectoryRunner`` schedule into a closed loop: a
+per-stage telemetry stream (:mod:`repro.autogrow.telemetry` — ring-buffered
+loss EMA / tokens / roofline FLOPs, exposing return-per-FLOP) drives a
+pluggable growth policy (:mod:`repro.autogrow.policy` — ``step_budget``
+reproducing the static behavior, ``loss_plateau`` / ``rpf_decay`` per
+"Stacking Your Transformers", and a LAG-style ``probe`` that short-trains
+candidate operators and commits the best). Trajectory stages opt in with
+``steps: "auto"`` plus a ``policy`` block
+(:class:`repro.trajectory.TrajectoryConfig`); the CLI entry is
+``launch/train.py --autogrow cfg.json``.
+
+The third leg of the subsystem lives in :func:`repro.core.grow.train_ligo`:
+the LiGO phase itself is elastic — its scan runs in chunked legs whose
+``(ligo, momentum, step)`` carry is checkpointed between chunks, so a job
+killed *inside* a long operator-learning hop resumes mid-phase instead of
+redoing the hop from the stage boundary.
+"""
+from repro.autogrow.policy import (POLICY_KINDS, LossPlateauPolicy, Policy,
+                                   PolicySpec, ProbePolicy, RpfDecayPolicy,
+                                   StepBudgetPolicy, make_policy,
+                                   probe_methods)
+from repro.autogrow.telemetry import Telemetry
+
+__all__ = ["Telemetry", "PolicySpec", "Policy", "StepBudgetPolicy",
+           "LossPlateauPolicy", "RpfDecayPolicy", "ProbePolicy",
+           "make_policy", "probe_methods", "POLICY_KINDS"]

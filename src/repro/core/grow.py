@@ -52,12 +52,28 @@ def _stack_batches(batches):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
 
 
+def _ligo_phase_id(cfg1: ModelConfig, cfg2: ModelConfig, steps: int,
+                   lr: float, momentum: float,
+                   phase_meta: Optional[Dict]) -> Dict:
+    """Identity stamped on (and validated against) every phase checkpoint:
+    a carry from a different hop, budget or schedule must never be resumed
+    into this phase — it is silently ignored and the phase starts fresh."""
+    pid = {"ligo_cfg1": cfg1.config_hash(), "ligo_cfg2": cfg2.config_hash(),
+           "ligo_steps": int(steps), "ligo_lr": float(lr),
+           "ligo_momentum": float(momentum)}
+    pid.update(phase_meta or {})
+    return pid
+
+
 def train_ligo(ligo, small_params, cfg1: ModelConfig, cfg2: ModelConfig,
                data_it: Iterator[Dict[str, jax.Array]], *,
                steps: int = 100, lr: float = 1e-3, momentum: float = 0.9,
                loss_chunk: int = 0, jit: bool = True,
                log_every: int = 0, engine: str = "plan",
-               scan_chunk: int = 0) -> Tuple[Dict, list]:
+               scan_chunk: int = 0, phase_ckpt=None,
+               phase_meta: Optional[Dict] = None,
+               checkpoint_every_chunks: int = 1,
+               fail_at: Optional[int] = None) -> Tuple[Dict, list]:
     """The ~100-step SGD phase optimising only the LiGO parameters.
 
     The phase runs as chunks of ``scan_chunk`` steps: each chunk prefetches
@@ -69,6 +85,26 @@ def train_ligo(ligo, small_params, cfg1: ModelConfig, cfg2: ModelConfig,
     happen at trace time only). An explicit ``scan_chunk`` that does not
     divide ``steps`` still works but the ragged final chunk compiles a
     second program.
+
+    **Elastic phase** (``phase_ckpt``): pass a
+    :class:`repro.checkpoint.CheckpointManager` and the
+    ``(ligo, momentum, step)`` scan carry is checkpointed (async) every
+    ``checkpoint_every_chunks`` chunk boundaries, stamped with the phase
+    identity (config pair, budget, schedule, plus the caller's
+    ``phase_meta`` — the trajectory runner adds its trajectory hash and
+    stage index). A later call with the same arguments restores the carry
+    and continues from the last finished chunk — on any mesh, since the
+    carry is replicated — instead of redoing the phase from step 0. A
+    checkpoint whose identity does not match is ignored (fresh start), so a
+    stale phase directory from an earlier hop can never corrupt a new one.
+    Resume consumes the batch iterator deterministically: the first
+    ``start`` batches are drawn and discarded so step ``k``'s batch is the
+    same in the resumed and uninterrupted runs.
+
+    ``fail_at`` is a chaos-testing knob: after the first chunk boundary
+    ``>= fail_at`` (checkpoint durably written first), the phase raises —
+    the deterministic mid-phase "kill" used by the tests and the CI
+    kill+resume smoke.
     """
     grad_fn = jax.value_and_grad(
         partial(ligo_loss, cfg1=cfg1, cfg2=cfg2, loss_chunk=loss_chunk,
@@ -87,16 +123,6 @@ def train_ligo(ligo, small_params, cfg1: ModelConfig, cfg2: ModelConfig,
         (ligo, mom), losses = jax.lax.scan(sgd_step, (ligo, mom), batches)
         return ligo, mom, losses
 
-    if jit:
-        # Donating the (ligo, momentum) carry keeps the phase zero-copy
-        # between chunks; CPU jax warns on donation, so gate it. The first
-        # chunk would otherwise donate (delete) the *caller's* operator
-        # buffers, so hand it an owned copy.
-        donate = (0, 1) if jax.default_backend() != "cpu" else ()
-        run_chunk = jax.jit(run_chunk, donate_argnums=donate)
-        if donate:
-            ligo = jax.tree.map(jnp.array, ligo)
-
     if steps <= 0:
         return ligo, []
     if scan_chunk > 0:
@@ -111,20 +137,106 @@ def train_ligo(ligo, small_params, cfg1: ModelConfig, cfg2: ModelConfig,
             chunk -= 1
         if steps % chunk:
             chunk = min(steps, 32)
+
+    # ---- elastic-phase restore ------------------------------------------
     mom = jax.tree.map(jnp.zeros_like, ligo)
     losses: list = []
-    done = 0
+    start = 0
+    pid = _ligo_phase_id(cfg1, cfg2, steps, lr, momentum, phase_meta)
+    if phase_ckpt is not None:
+        saved = phase_ckpt.latest_meta()
+        if saved is not None and all(saved.get(k) == v
+                                     for k, v in pid.items()):
+            tmpl = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                {"ligo": ligo, "mom": mom})
+            state, _ = phase_ckpt.restore(phase_ckpt.latest_step(), tmpl)
+            ligo, mom = state["ligo"], state["mom"]
+            start = int(saved["phase_step"])
+            losses = [float(x) for x in saved.get("losses", [])][:start]
+            print(f"[ligo] resumed LiGO phase at step {start}/{steps}",
+                  flush=True)
+
+    if jit:
+        # Donating the (ligo, momentum) carry keeps the phase zero-copy
+        # between chunks; CPU jax warns on donation, so gate it. The first
+        # chunk would otherwise donate (delete) the *caller's* operator
+        # buffers, so hand it an owned copy.
+        donate = (0, 1) if jax.default_backend() != "cpu" else ()
+        run_chunk = jax.jit(run_chunk, donate_argnums=donate)
+        if donate:
+            ligo = jax.tree.map(jnp.array, ligo)
+            mom = jax.tree.map(jnp.array, mom)
+
+    for _ in range(start):          # deterministic resume: skip spent batches
+        next(data_it)
+
+    done = start
+    chunks_done = 0
     while done < steps:
         n = min(chunk, steps - done)
         batches = _stack_batches([next(data_it) for _ in range(n)])
         ligo, mom, chunk_losses = run_chunk(ligo, mom, batches)
         losses.extend(float(l) for l in chunk_losses)
         done += n
+        chunks_done += 1
+        failing = fail_at is not None and fail_at <= done < steps
+        if (phase_ckpt is not None and done < steps
+                and (chunks_done % max(checkpoint_every_chunks, 1) == 0
+                     or failing)):
+            # async carry snapshot; CheckpointManager device_gets before the
+            # background write, so the next chunk may donate these buffers.
+            # An injected failure forces the save even off-cadence: the
+            # chaos contract is "checkpoint durably written, then die".
+            phase_ckpt.save(done, {"ligo": ligo, "mom": mom},
+                            {**pid, "phase_step": done, "losses": losses})
+        if failing:
+            if phase_ckpt is not None:
+                phase_ckpt.wait()          # the injected kill must be durable
+            raise RuntimeError(
+                f"injected LiGO-phase failure at step {done}/{steps}")
         if log_every:
             for s in range(done - n, done):
                 if s % log_every == 0:
                     print(f"[ligo] step {s:4d} loss {losses[s]:.4f}")
+    if phase_ckpt is not None:
+        phase_ckpt.wait()
     return ligo, losses
+
+
+def _validate_opt_state(opt_state, small_params) -> None:
+    """Refuse optimizer state that cannot ride a growth operator — with a
+    message, not a shape crash deep inside the growth plan.
+
+    Checkpoints written before optimizer-state growth existed (or by a
+    different trainer) lack the ``AdamWState`` layout: no ``count`` leaf, no
+    ``m``/``v`` moment trees, or moments that do not mirror the source
+    parameter tree. Any of those used to die as an opaque pytree/shape error
+    inside ``apply_ligo``; surface the actual problem instead.
+    """
+    if opt_state is None:
+        return
+    missing = [f for f in ("m", "v", "count")
+               if getattr(opt_state, f, None) is None]
+    if missing:
+        raise ValueError(
+            f"opt_state is missing {missing} — not a grow-compatible "
+            "AdamWState. This optimizer state predates grow_state (or was "
+            "written by an older trainer). Re-checkpoint with the current "
+            "trainer, or start the grown stage fresh with "
+            "grow_optimizer=False / opt_state=None.")
+    if small_params is None:
+        return
+    want = jax.tree.structure(small_params)
+    for name in ("m", "v"):
+        got = jax.tree.structure(getattr(opt_state, name))
+        if got != want:
+            raise ValueError(
+                f"opt_state.{name} does not mirror the source parameter "
+                f"tree ({got} vs {want}) — the checkpointed optimizer "
+                "state predates grow_state or belongs to a different "
+                "architecture. Re-checkpoint, or pass "
+                "grow_optimizer=False to reset moments after the hop.")
 
 
 def grow(small_params, cfg1: ModelConfig, cfg2: ModelConfig, *,
@@ -133,7 +245,10 @@ def grow(small_params, cfg1: ModelConfig, cfg2: ModelConfig, *,
          ligo_lr: float = 1e-3, ligo_momentum: float = 0.9,
          loss_chunk: int = 0, depth_init: str = "stack",
          engine: str = "plan", opt_state=None, grow_optimizer: bool = True,
-         ) -> Tuple[Dict, Dict[str, Any]]:
+         apply: bool = True, ligo_ckpt=None,
+         ligo_meta: Optional[Dict] = None, ligo_scan_chunk: int = 0,
+         ligo_fail_at: Optional[int] = None,
+         ) -> Tuple[Optional[Dict], Dict[str, Any]]:
     """Grow Θ_small → Θ_large. Returns (big_params, info).
 
     When an AdamW ``opt_state`` for the small model is passed, the grown
@@ -144,9 +259,20 @@ def grow(small_params, cfg1: ModelConfig, cfg2: ModelConfig, *,
     training *continues* instead of re-warming. ``method="random"`` (or
     ``grow_optimizer=False``) has no operator to carry state through and
     returns a fresh ``adamw_init`` of the big tree.
+
+    ``apply=False`` builds (and for LiGO, trains) the operator but skips
+    materialising Θ_large and the optimizer growth — ``(None, info)`` with
+    ``info["operator"]`` set. Multi-hop callers (skip-stage composition in
+    the trajectory runner) use it to collect per-hop operators and apply
+    their analytic composition once.
+
+    ``ligo_ckpt``/``ligo_meta``/``ligo_scan_chunk``/``ligo_fail_at`` make
+    the LiGO phase elastic — threaded straight into :func:`train_ligo`'s
+    phase-checkpointing (see its docstring).
     """
     key = key if key is not None else jax.random.PRNGKey(0)
     info: Dict[str, Any] = {"method": method}
+    _validate_opt_state(opt_state, small_params)
     if method == "random":
         big = init_params(cfg2, key)
         if opt_state is not None:
@@ -167,12 +293,18 @@ def grow(small_params, cfg1: ModelConfig, cfg2: ModelConfig, *,
             op, losses = train_ligo(op, small_params, cfg1, cfg2, data_it,
                                     steps=ligo_steps, lr=ligo_lr,
                                     momentum=ligo_momentum,
-                                    loss_chunk=loss_chunk, engine=engine)
+                                    loss_chunk=loss_chunk, engine=engine,
+                                    scan_chunk=ligo_scan_chunk,
+                                    phase_ckpt=ligo_ckpt,
+                                    phase_meta=ligo_meta,
+                                    fail_at=ligo_fail_at)
             info["ligo_losses"] = losses
     else:
         raise ValueError(method)
-    big = apply_ligo(op, small_params, cfg1, cfg2, engine=engine)
     info["operator"] = op
+    if not apply:
+        return None, info
+    big = apply_ligo(op, small_params, cfg1, cfg2, engine=engine)
     if opt_state is not None:
         if grow_optimizer:
             from repro.optim import grow_adamw_state

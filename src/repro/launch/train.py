@@ -6,9 +6,11 @@ fault-tolerant supervision.
     PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \\
         --grow-from half --method ligo --steps 200
 
-    # multi-stage scheduled growth (train→grow→train…, resumable):
+    # multi-stage scheduled growth (train→grow→train…, resumable; the
+    # smoke schedule ends with a steps="auto" stage, so it runs under the
+    # adaptive controller):
     PYTHONPATH=src python -m repro.launch.train \\
-        --trajectory examples/trajectory_smoke.json
+        --autogrow examples/trajectory_smoke.json
 
     # production (TPU pod): same entrypoint with --mesh single|multi.
 
@@ -59,9 +61,19 @@ def main():
                     help="run a multi-stage growth trajectory "
                          "(train→grow→train…) from a JSON stage schedule; "
                          "resumable mid-stage via --ckpt-dir")
+    ap.add_argument("--autogrow", default=None, metavar="CFG_JSON",
+                    help="like --trajectory, with the adaptive growth "
+                         "controller enabled: stages may use steps='auto' "
+                         "+ a policy block (loss_plateau / rpf_decay / "
+                         "probe) and the LiGO phase checkpoints its own "
+                         "carry, so a kill mid-hop resumes mid-phase")
     ap.add_argument("--max-steps", type=int, default=None,
                     help="trajectory only: stop (checkpointing) after this "
                          "many global train steps — relaunch resumes")
+    ap.add_argument("--fail-at-ligo-step", type=int, default=None,
+                    help="chaos testing: raise after the LiGO-phase "
+                         "checkpoint at this phase step (the CI kill+resume "
+                         "smoke kills mid-hop with it)")
     ap.add_argument("--grow-from", default=None,
                     help="'half' or an arch name: grow instead of cold start")
     ap.add_argument("--method", default="ligo",
@@ -83,15 +95,28 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    if args.trajectory:
+    if args.trajectory and args.autogrow:
+        raise SystemExit("--trajectory and --autogrow are exclusive "
+                         "(they name the same schedule file)")
+    if args.trajectory or args.autogrow:
         from repro.trajectory import TrajectoryConfig, TrajectoryRunner
-        traj = TrajectoryConfig.from_json(args.trajectory)
+        traj = TrajectoryConfig.from_json(args.trajectory or args.autogrow)
+        if args.trajectory and traj.has_auto_stages:
+            raise SystemExit(
+                "the schedule has steps='auto' stages — run it with "
+                "--autogrow (the adaptive controller) instead of "
+                "--trajectory")
         mesh = build_mesh(args.mesh)
         print(f"[train] trajectory {traj.hash()}: "
               f"{' -> '.join(st.cfg.name for st in traj.stages)} "
-              f"({traj.total_steps} steps) mesh={dict(mesh.shape)}")
-        res = TrajectoryRunner(traj, ckpt_dir=args.ckpt_dir,
-                               mesh=mesh).run(max_steps=args.max_steps)
+              f"({'<=' if traj.has_auto_stages else ''}{traj.total_steps} "
+              f"steps) mesh={dict(mesh.shape)}")
+        res = TrajectoryRunner(
+            traj, ckpt_dir=args.ckpt_dir, mesh=mesh,
+            ligo_fail_at=args.fail_at_ligo_step).run(
+                max_steps=args.max_steps)
+        for d in res["decisions"]:
+            print(f"[train] autogrow decision: {d}")
         print(f"[train] trajectory {res['status']}: stage "
               f"{res['stage'] + 1}/{len(traj.stages)} ({res['cfg'].name}) "
               f"global_step={res['global_step']} "
@@ -181,7 +206,8 @@ def main():
             if "trajectory" in meta:
                 raise SystemExit(
                     f"--ckpt-dir holds a trajectory checkpoint (stage "
-                    f"{meta.get('stage')}); resume it with --trajectory")
+                    f"{meta.get('stage')}); resume it with --trajectory / "
+                    "--autogrow")
             if meta.get("config", cfg.config_hash()) != cfg.config_hash():
                 raise SystemExit(
                     f"--ckpt-dir holds a checkpoint of "

@@ -1,11 +1,13 @@
 from repro.optim.adamw import (AdamWState, SGDState, adamw_init, adamw_update,
                                clip_by_global_norm, decay_mask, global_norm,
                                sgd_init, sgd_update)
-from repro.optim.grow_state import grow_adamw_state
+from repro.optim.grow_state import (grow_adamw_state, grow_adamw_state_chain,
+                                    hop_uses_grouped_gamma)
 from repro.optim.schedules import SCHEDULES, constant, warmup_cosine, warmup_linear
 from repro.optim import compression
 
 __all__ = ["AdamWState", "SGDState", "adamw_init", "adamw_update", "sgd_init",
-           "sgd_update", "grow_adamw_state", "decay_mask",
+           "sgd_update", "grow_adamw_state", "grow_adamw_state_chain",
+           "hop_uses_grouped_gamma", "decay_mask",
            "clip_by_global_norm", "global_norm", "SCHEDULES",
            "warmup_cosine", "warmup_linear", "constant", "compression"]

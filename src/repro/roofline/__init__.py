@@ -1,3 +1,12 @@
 from repro.roofline.hlo import collect_hlo_stats
 
-__all__ = ["collect_hlo_stats"]
+
+def train_flops_per_step(cfg, global_batch: int, seq_len: int) -> float:
+    """``6·N_active·tokens`` per optimizer step (lazy import of the full
+    roofline analysis — see :func:`repro.roofline.analysis
+    .train_flops_per_step`)."""
+    from repro.roofline.analysis import train_flops_per_step as _f
+    return _f(cfg, global_batch, seq_len)
+
+
+__all__ = ["collect_hlo_stats", "train_flops_per_step"]

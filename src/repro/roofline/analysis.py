@@ -31,6 +31,14 @@ ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                    "artifacts", "dryrun")
 
 
+def train_flops_per_step(cfg, global_batch: int, seq_len: int) -> float:
+    """``6·N_active·tokens`` for ONE optimizer step — the same training-FLOP
+    model :func:`model_flops` applies to the named ``train`` shapes, exposed
+    for callers that know their batch geometry directly (the autogrow
+    telemetry stream computes return-per-FLOP from it)."""
+    return 6.0 * cfg.active_param_count() * global_batch * seq_len
+
+
 def model_flops(arch: str, shape_name: str) -> float:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]

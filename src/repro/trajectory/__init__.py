@@ -64,15 +64,26 @@ Skip-stage growth: the per-hop operators compose analytically
 (:func:`repro.core.compose_chain` — width factors as matrix products, depth
 patterns chained), so any stage-A→stage-C mapping is available as a single
 fused GrowthPlan without materialising intermediates (used by
-``serve --grow-to a,b,c`` and for restarts that jump stages). Caveat: that
-exactness covers the linear map (parameters, ``m``) only — squaring a
-composed dense/GQA operator is not the composition of the squared hops, so
-second moments should ride each hop individually when LEMON-exact ``v``
-matters (the runner always grows per hop; only skip-stage shortcuts face
-this).
+``serve --grow-to a,b,c``, and by the runner itself, which collapses runs
+of zero-step stages into one composed hop). That exactness covers the
+linear map (parameters, ``m``) only — squaring a composed operator is not
+the composition of the squared hops when GQA's ``gamma`` group-averages —
+so composed hops grow ``v`` per hop under grouped heads and through the
+composed squared operator otherwise
+(:func:`repro.optim.grow_adamw_state_chain`), keeping skip-stage restarts
+LEMON-exact.
+
+Adaptive scheduling: a stage may declare ``steps="auto"`` plus a
+:class:`repro.autogrow.PolicySpec` — the runner then ends the stage when
+the policy fires on the stage's telemetry stream instead of at a fixed
+count, and a ``probe`` policy picks the hop's growth operator by short
+probes (see :mod:`repro.autogrow`). The LiGO phase inside every hop is
+elastic: its scan carry is checkpointed between chunks, so a kill mid-hop
+resumes mid-phase.
 """
+from repro.autogrow.policy import PolicySpec
 from repro.trajectory.config import GrowthSpec, Stage, TrajectoryConfig
 from repro.trajectory.runner import TrajectoryRunner, run_trajectory
 
-__all__ = ["GrowthSpec", "Stage", "TrajectoryConfig", "TrajectoryRunner",
-           "run_trajectory"]
+__all__ = ["GrowthSpec", "PolicySpec", "Stage", "TrajectoryConfig",
+           "TrajectoryRunner", "run_trajectory"]

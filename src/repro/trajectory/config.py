@@ -7,7 +7,8 @@ stage is *entered* — the growth method and its LiGO budget. It is pure data
 and its :meth:`TrajectoryConfig.hash` is stamped into every checkpoint so a
 resume can refuse state from a different schedule.
 
-JSON format (``launch/train.py --trajectory cfg.json``)::
+JSON format (``launch/train.py --trajectory cfg.json`` /
+``--autogrow cfg.json``)::
 
     {
       "arch": "llama3-8b",        # base registry arch
@@ -17,7 +18,10 @@ JSON format (``launch/train.py --trajectory cfg.json``)::
         {"steps": 40, "arch": "half"},                  # stage 0: source
         {"steps": 40, "grow": "2x", "method": "ligo",   # grow INTO stage 1
          "ligo_steps": 10},
-        {"steps": 40, "grow": "2x", "method": "stackbert"}
+        {"steps": "auto",                               # adaptive stage end
+         "grow": "2x", "method": "stackbert",
+         "policy": {"kind": "loss_plateau", "max_steps": 80,
+                    "min_steps": 10, "window": 8, "tol": 2e-3}}
       ]
     }
 
@@ -26,6 +30,12 @@ takes ``half_config`` of the base; any other name hits the registry (smoke-
 reduced when ``smoke``). Later stages default to ``"grow": "2x"`` —
 ``grow_target`` of the *previous* stage's config — or name an explicit
 registry arch. Every consecutive pair must satisfy ``check_growable``.
+
+``"steps": "auto"`` hands the stage's end to the adaptive growth controller
+(:mod:`repro.autogrow`): the stage trains until its ``policy`` block fires
+(or the policy's mandatory ``max_steps`` cap), instead of a fixed count.
+``Stage.budget`` is the hard upper bound either way; the controller lives in
+the runner, this file stays pure data.
 """
 from __future__ import annotations
 
@@ -35,6 +45,7 @@ import json
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
+from repro.autogrow.policy import PolicySpec
 from repro.configs.base import ModelConfig
 from repro.core import spec as S
 
@@ -48,18 +59,34 @@ class GrowthSpec:
     ligo_lr: float = 1e-3
     ligo_momentum: float = 0.9
     grow_optimizer: bool = True  # carry AdamW moments through the operator
+    ligo_scan_chunk: int = 0     # elastic-phase scan-leg length (0 = auto);
+    #                              the phase carry is checkpointed at chunk
+    #                              boundaries, so this is also the resume
+    #                              granularity of a killed hop
 
 
 @dataclass(frozen=True)
 class Stage:
     """One trajectory stage: an architecture trained for ``steps`` steps.
 
-    ``growth`` describes the hop *into* this stage; it is None exactly for
-    stage 0 (the cold-started source model).
+    ``steps=None`` is the JSON ``"auto"`` form: the stage ends when its
+    ``policy`` fires (:mod:`repro.autogrow.policy`), bounded by the policy's
+    ``max_steps``. ``growth`` describes the hop *into* this stage; it is
+    None exactly for stage 0 (the cold-started source model).
     """
     cfg: ModelConfig
-    steps: int
+    steps: Optional[int]
     growth: Optional[GrowthSpec] = None
+    policy: Optional[PolicySpec] = None
+
+    @property
+    def auto(self) -> bool:
+        return self.steps is None
+
+    @property
+    def budget(self) -> int:
+        """Hard cap on the stage's train leg (== ``steps`` when static)."""
+        return self.steps if self.steps is not None else self.policy.max_steps
 
 
 @dataclass(frozen=True)
@@ -77,6 +104,18 @@ class TrajectoryConfig:
         if self.stages[0].growth is not None:
             raise ValueError("stage 0 is the source model; it has no "
                              "growth hop")
+        for i, st in enumerate(self.stages):
+            if st.auto:
+                if st.policy is None:
+                    raise ValueError(f"stage {i} has steps='auto' but no "
+                                     "policy block")
+                if st.policy.max_steps <= 0:
+                    raise ValueError(f"stage {i}: an auto stage's policy "
+                                     "needs max_steps > 0 (the hard cap)")
+            elif st.policy is not None:
+                raise ValueError(f"stage {i} has both a fixed step count "
+                                 "and a policy — use steps='auto' for "
+                                 "policy-scheduled stages")
         for i in range(1, len(self.stages)):
             if self.stages[i].growth is None:
                 raise ValueError(f"stage {i} must carry a GrowthSpec")
@@ -84,15 +123,22 @@ class TrajectoryConfig:
 
     # ------------------------------------------------------------------
     @property
+    def has_auto_stages(self) -> bool:
+        return any(st.auto for st in self.stages)
+
+    @property
     def total_steps(self) -> int:
-        return sum(st.steps for st in self.stages)
+        """Total train steps — exact for static schedules, the ``budget``
+        upper bound for auto stages."""
+        return sum(st.budget for st in self.stages)
 
     def stage_bounds(self) -> Tuple[Tuple[int, int], ...]:
-        """[start, end) global-step interval of each stage."""
+        """[start, end) global-step interval of each stage (budget-based,
+        i.e. upper bounds when the schedule has auto stages)."""
         out, start = [], 0
         for st in self.stages:
-            out.append((start, start + st.steps))
-            start += st.steps
+            out.append((start, start + st.budget))
+            start += st.budget
         return tuple(out)
 
     def hash(self) -> str:
@@ -102,6 +148,8 @@ class TrajectoryConfig:
                 "cfg": st.cfg.config_hash(), "steps": st.steps,
                 "growth": (None if st.growth is None
                            else dataclasses.asdict(st.growth)),
+                "policy": (None if st.policy is None
+                           else dataclasses.asdict(st.policy)),
             } for st in self.stages],
             **{k: getattr(self, k) for k in ("batch", "seq", "lr",
                                              "checkpoint_every", "seed")},
@@ -152,9 +200,18 @@ class TrajectoryConfig:
                     ligo_steps=int(entry.get("ligo_steps", 100)),
                     ligo_lr=float(entry.get("ligo_lr", 1e-3)),
                     ligo_momentum=float(entry.get("ligo_momentum", 0.9)),
-                    grow_optimizer=bool(entry.get("grow_optimizer", True)))
-            stages.append(Stage(cfg=cfg, steps=int(entry["steps"]),
-                                growth=growth))
+                    grow_optimizer=bool(entry.get("grow_optimizer", True)),
+                    ligo_scan_chunk=int(entry.get("ligo_scan_chunk", 0)))
+            raw_steps = entry["steps"]
+            if raw_steps == "auto":
+                steps: Optional[int] = None
+                policy = PolicySpec.from_json(entry.get("policy", {}))
+            else:
+                steps = int(raw_steps)
+                policy = (PolicySpec.from_json(entry["policy"])
+                          if "policy" in entry else None)
+            stages.append(Stage(cfg=cfg, steps=steps, growth=growth,
+                                policy=policy))
             prev = cfg
         return TrajectoryConfig(
             stages=tuple(stages),

@@ -16,9 +16,11 @@ from conftest import assert_trees_close_normalized
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import TrainConfig
 from repro.configs.paper_models import BERT_SMALL
-from repro.core import apply_ligo, grow, init_ligo_params
+from repro.core import (apply_ligo, compose_chain, grow, init_ligo_params)
+from repro.core import operators as cops
 from repro.data import batch_for_step
-from repro.optim import adamw_init, grow_adamw_state
+from repro.optim import (adamw_init, grow_adamw_state,
+                         grow_adamw_state_chain, hop_uses_grouped_gamma)
 from repro.trajectory import (GrowthSpec, Stage, TrajectoryConfig,
                               TrajectoryRunner)
 from repro.training import init_train_state, make_train_step
@@ -262,6 +264,144 @@ def test_trajectory_from_json_resolution():
     assert traj.stages[2].growth.method == "bert2bert"
     assert traj.total_steps == 30
     assert traj.stage_bounds() == ((0, 10), (10, 20), (20, 30))
+
+
+# ---------------------------------------------------------------------------
+# GQA second-moments rule: v per hop under grouped gamma (skip-stage path)
+# ---------------------------------------------------------------------------
+# GQA chain (kv < heads at every hop, constant d_head so one-hot selection
+# operators apply): gamma group-averages here, so squared operators do NOT
+# compose — the very divergence the chain rule exists for.
+G0 = BERT_SMALL.scaled(name="gq0", n_layers=2, d_model=32, n_heads=4,
+                       n_kv_heads=2, d_head=8, d_ff=64, vocab_size=64,
+                       max_seq=64, dtype="float32", objective="clm",
+                       encoder_only=False, causal=True)
+G1 = G0.scaled(name="gq1", n_layers=3, d_model=48, n_heads=6, n_kv_heads=2,
+               d_ff=96)
+G2 = G1.scaled(name="gq2", n_layers=4, d_model=64, n_heads=8, n_kv_heads=4,
+               d_ff=128)
+
+
+def _pretrained(cfg, steps=6, seed=0):
+    params, opt = init_train_state(cfg, jax.random.PRNGKey(seed))
+    step = jax.jit(make_train_step(
+        cfg, TrainConfig(steps=steps, warmup_steps=2, lr=1e-3)))
+    for i in range(steps):
+        b = {k: jnp.asarray(v)
+             for k, v in batch_for_step(cfg, i, 4, 16, seed=seed).items()}
+        params, opt, _ = step(params, opt, b, jnp.asarray(i))
+    return params, opt
+
+
+def test_gqa_squared_operators_do_not_compose():
+    """Σcᵢ² vs (Σcᵢ)²: under grouped heads, even ONE-HOT selection factors
+    (which square-compose exactly on MHA — test_compose) diverge between
+    squaring per hop and squaring the composed operator, because gamma
+    column-averages each kv group (/G) before the square is taken."""
+    assert hop_uses_grouped_gamma(G0, G1)
+    assert not hop_uses_grouped_gamma(T0, T1)
+    _, opt = _pretrained(G0)
+    op_a = cops.stackbert_operator(G0, G1, key=jax.random.PRNGKey(1))
+    op_b = cops.stackbert_operator(G1, G2, key=jax.random.PRNGKey(2))
+    mid = apply_ligo(op_a, opt.v, G0, G1, engine="legacy", square=True)
+    v_seq = apply_ligo(op_b, mid, G1, G2, engine="legacy", square=True)
+    from repro.core import compose_ligo
+    composed = compose_ligo(op_a, op_b, G0, G1, G2)
+    v_comp = apply_ligo(composed, opt.v, G0, G2, engine="legacy",
+                        square=True)
+    rel = max(float(np.abs(np.asarray(a) - np.asarray(b)).max()
+                    / (np.abs(np.asarray(b)).max() + 1e-30))
+              for a, b in zip(jax.tree.leaves(v_comp),
+                              jax.tree.leaves(v_seq)))
+    assert rel > 1e-3, f"expected Σc² vs (Σc)² divergence, got rel={rel}"
+
+
+def test_grow_adamw_state_chain_gqa_rule():
+    """The chain rule: m through the composed operator, v per hop when any
+    hop's gamma group-averages — so a skip-stage restart produces the same
+    moments a stage-by-stage run would (LEMON-exact)."""
+    _, opt = _pretrained(G0)
+    chain = [G0, G1, G2]
+    ops_list = [init_ligo_params(jax.random.PRNGKey(1), G0, G1),
+                init_ligo_params(jax.random.PRNGKey(2), G1, G2)]
+    grown = grow_adamw_state_chain(opt, ops_list, chain)
+
+    # v: hop-by-hop squared oracle (what the stage-by-stage run does)
+    v_ref = opt.v
+    m_ref = opt.m
+    for op, a, b in zip(ops_list, chain[:-1], chain[1:]):
+        v_ref = apply_ligo(op, v_ref, a, b, engine="legacy", square=True)
+        m_ref = apply_ligo(op, m_ref, a, b, engine="legacy")
+    assert_trees_close_normalized(grown.v, v_ref, rel=1e-5)
+    # m: linear, so composed == sequential — both are the right answer
+    assert_trees_close_normalized(grown.m, m_ref, rel=1e-5)
+    assert int(grown.count) == int(opt.count)
+    for leaf in jax.tree.leaves(grown.v):
+        assert float(jnp.min(leaf)) >= 0.0
+
+    # MHA chain keeps the composed fast path for v too
+    m0, m1, m2 = (c.scaled(name=c.name + "m", n_kv_heads=c.n_heads)
+                  for c in chain)
+    _, opt_m = _pretrained(m0)
+    mops = [cops.stackbert_operator(m0, m1, key=jax.random.PRNGKey(1)),
+            cops.stackbert_operator(m1, m2, key=jax.random.PRNGKey(2))]
+    grown_m = grow_adamw_state_chain(opt_m, mops, [m0, m1, m2])
+    comp = compose_chain(mops, [m0, m1, m2])
+    v_comp = apply_ligo(comp, opt_m.v, m0, m2, engine="legacy", square=True)
+    assert_trees_close_normalized(grown_m.v, v_comp, rel=1e-5)
+
+
+def test_runner_collapses_zero_step_stages_lemon_exact():
+    """Consecutive zero-step stages run as ONE composed fused hop (the
+    skip-stage path): the runner's stage-entry snapshot must equal the
+    analytic oracle — params and m through the composed operator, v per hop
+    (GQA rule) — and no intermediate-stage checkpoint may exist."""
+    traj = TrajectoryConfig(stages=(
+        Stage(G0, 2),
+        Stage(G1, 0, GrowthSpec(method="ligo", ligo_steps=0)),
+        Stage(G2, 2, GrowthSpec(method="ligo", ligo_steps=0))),
+        batch=4, seq=16, lr=1e-3, checkpoint_every=3)
+    with tempfile.TemporaryDirectory() as d:
+        r = TrajectoryRunner(traj, ckpt_dir=d, verbose=False).run()
+        assert r["status"] == "done"
+        # stage 1 was skipped through: no train/grow timing, no checkpoint
+        assert 1 not in r["timings"]
+        from repro.checkpoint.io import list_steps, load_meta
+        assert all(load_meta(d, s)["stage"] != 1 for s in list_steps(d))
+        # the stage-2 entry snapshot (post-growth, global step 2)
+        mgr = CheckpointManager(d)
+        tmpl = {"params": jax.eval_shape(
+                    lambda: init_train_state(G2, jax.random.PRNGKey(0))[0]),
+                "opt": jax.eval_shape(
+                    adamw_init, jax.eval_shape(
+                        lambda: init_train_state(
+                            G2, jax.random.PRNGKey(0))[0]))}
+        snap, meta = mgr.restore(2, tmpl)
+        assert meta["stage"] == 2 and meta["stage_step"] == 0
+
+    # oracle: replicate stage 0 exactly, then the composed hop by hand
+    p0, opt0 = init_train_state(G0, jax.random.PRNGKey(traj.seed))
+    tcfg = TrainConfig(steps=2, warmup_steps=1, lr=traj.lr,
+                       seq_len=traj.seq, global_batch=traj.batch)
+    step = jax.jit(make_train_step(G0, tcfg))
+    for i in range(2):
+        b = {k: jnp.asarray(v) for k, v in
+             batch_for_step(G0, i, traj.batch, traj.seq,
+                            seed=traj.seed).items()}
+        p0, opt0, _ = step(p0, opt0, b, jnp.asarray(i))
+    ops_list = [init_ligo_params(jax.random.PRNGKey(traj.seed + 7 * 1),
+                                 G0, G1),
+                init_ligo_params(jax.random.PRNGKey(traj.seed + 7 * 2),
+                                 G1, G2)]
+    comp = compose_chain(ops_list, [G0, G1, G2])
+    want_p = apply_ligo(comp, p0, G0, G2)
+    want_m = apply_ligo(comp, opt0.m, G0, G2)
+    want_v = opt0.v
+    for op, a, b in zip(ops_list, [G0, G1], [G1, G2]):
+        want_v = apply_ligo(op, want_v, a, b, engine="legacy", square=True)
+    assert_trees_close_normalized(snap["params"], want_p, rel=1e-5)
+    assert_trees_close_normalized(snap["opt"].m, want_m, rel=1e-5)
+    assert_trees_close_normalized(snap["opt"].v, want_v, rel=1e-5)
 
 
 def test_supervisor_threads_meta_into_checkpoints():
