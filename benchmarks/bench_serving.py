@@ -1,0 +1,252 @@
+"""Serving benchmark: throughput and tail latency THROUGH a live hop.
+
+One process serves a batch of sessions on the small architecture, hops to
+the grown architecture mid-serve (params double-buffered via the GrowthPlan
+executor, live KV caches migrated, buffers swapped between decode steps),
+and keeps decoding — the numbers that matter for zero-downtime growth:
+
+- tokens/s over the whole run (admission + decode + the hop itself);
+- decode-step p50/p99 *including* the steps around the swap — the tail is
+  where a blocking hop would show up;
+- the hop's wall time, split by cache-migration path: lossless in-place
+  cache growth (LEMON-style zero-pad operator) vs the universal re-prefill
+  fallback (learned LiGO operator).
+
+Entries are MERGED into ``BENCH_growth.json`` (read-update-write, keyed by
+entry name) so ``bench_growth.engine_bench`` — which rewrites the whole
+file — and this benchmark can run in either order.
+
+Both architectures' serving programs are pre-warmed (``make_serving_fns``
+is memoised per config) so the reported tail reflects the serving system,
+not one-off XLA compiles; the grow itself is pre-planned the same way a
+long-lived server would have warmed it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.paper_models import BERT_SMALL
+from repro.core import init_ligo_params
+from repro.core.grow_cache import grow_decode_state
+from repro.core.operators import lemon_operator
+from repro.core.plan import plan_for
+from repro.models import init_params
+from repro.serving import HopController, ServingEngine
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_growth.json")
+
+SMALL = BERT_SMALL.scaled(
+    name="serve-small", n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+    d_head=16, d_ff=256, vocab_size=512, max_seq=256, dtype="float32",
+    objective="clm", encoder_only=False, causal=True)
+# lossless hop target: width-only (heads + ffn), MHA on both sides
+WIDE = SMALL.scaled(name="serve-wide", n_heads=8, n_kv_heads=8, d_ff=384)
+# general hop target: depth + d_model (cache migration must re-prefill)
+BIG = SMALL.scaled(name="serve-big", n_layers=6, d_model=96, d_head=24,
+                   d_ff=384)
+
+
+def _make_engine(params, cfg, *, slots, prompt_budget, gen_budget, n_req,
+                 seed=0):
+    eng = ServingEngine(params, cfg, slots=slots,
+                        prompt_budget=prompt_budget, gen_budget=gen_budget,
+                        queue_capacity=4 * n_req)
+    rng = np.random.RandomState(seed)
+    for _ in range(n_req):
+        plen = int(rng.randint(prompt_budget // 2, prompt_budget + 1))
+        eng.submit(list(rng.randint(0, cfg.vocab_size, plen)),
+                   max_new=gen_budget)
+    return eng
+
+
+def _prewarm(pairs, *, slots, prompt_budget, gen_budget):
+    """Compile both architectures' serving programs once, off the clock.
+
+    Shapes must match the measured engine exactly (``make_serving_fns`` is
+    memoised per ``(cfg, max_len)`` and jit caches per shape), so the warm
+    engines use the same slots/budgets; the re-prefill path's
+    ``(1, max_len)`` prefill shape is warmed explicitly."""
+    import jax.numpy as jnp
+    from repro.serving.engine import make_serving_fns
+    max_len = prompt_budget + gen_budget
+    for p, c in pairs:
+        eng = ServingEngine(p, c, slots=slots, prompt_budget=prompt_budget,
+                            gen_budget=gen_budget)
+        eng.submit([1, 2, 3], max_new=2)
+        eng.run()
+        prefill_one, _, _ = make_serving_fns(c, max_len)
+        toks = jnp.zeros((1, max_len), jnp.int32)
+        jax.block_until_ready(prefill_one(p, toks, jnp.asarray(3)))
+
+
+def _bench_live_hop(params, op, cfg2, label, *, hop_at=12, slots=8,
+                    prompt_budget=24, gen_budget=64, n_req=24,
+                    entries: List[Dict], speedups: Dict) -> None:
+    grown = plan_for(SMALL, cfg2, params).executor(mesh=None)(op, params)
+    jax.block_until_ready(grown)
+    _prewarm(((params, SMALL), (grown, cfg2)), slots=slots,
+             prompt_budget=prompt_budget, gen_budget=gen_budget)
+
+    eng = _make_engine(params, SMALL, slots=slots,
+                       prompt_budget=prompt_budget, gen_budget=gen_budget,
+                       n_req=n_req)
+    hop = HopController(eng, cfg2, op, background=True)
+
+    def on_step(e):
+        if e.decode_steps >= hop_at and hop.attempts == 0:
+            hop.begin()
+        if hop.attempts:
+            hop.poll()
+
+    t0 = time.perf_counter()
+    eng.run(on_step=on_step)
+    while not hop.poll():
+        pass
+    wall_s = time.perf_counter() - t0
+    assert hop.completed, "hop did not complete"
+
+    gen_tokens = sum(len(r.tokens) for r in eng.requests)
+    steps = np.asarray(eng.step_times_ms)
+    p50, p99 = float(np.percentile(steps, 50)), float(np.percentile(steps,
+                                                                    99))
+    tok_s = gen_tokens / wall_s
+    entries.extend([
+        {"name": f"serving[{label}]/decode_step_p50",
+         "wall_ms": round(p50, 3), "est_hbm_bytes": None,
+         "note": f"continuous batching, {slots} slots, {n_req} sessions, "
+                 f"median decode step across the whole run incl. the hop "
+                 f"({SMALL.name} -> {cfg2.name})"},
+        {"name": f"serving[{label}]/decode_step_p99_through_hop",
+         "wall_ms": round(p99, 3), "est_hbm_bytes": None,
+         "note": "p99 decode step including the steps around the swap — "
+                 "the stall a blocking hop would put here is bounded by "
+                 "cache migration + buffer flip (grow runs backgrounded)"},
+        {"name": f"serving[{label}]/live_hop",
+         "wall_ms": round(hop.hop_ms, 3), "est_hbm_bytes": None,
+         "note": f"begin->swap wall time, cache path: {hop.cache_path} "
+                 f"({len(eng.requests)} admitted, "
+                 f"{eng.counts()['dropped']} dropped)"},
+    ])
+    speedups[f"serving_{label}"] = {
+        "tok_s_through_hop": round(tok_s, 1),
+        "decode_p50_ms": round(p50, 3),
+        "decode_p99_ms": round(p99, 3),
+        "hop_ms": round(hop.hop_ms, 3),
+        "cache_path": hop.cache_path,
+        "dropped": eng.counts()["dropped"],
+    }
+
+
+def _bench_cache_grow(params, *, slots=8, prompt_budget=24, gen_budget=64,
+                      iters=5, entries: List[Dict],
+                      speedups: Dict) -> None:
+    """Cache-migration wall time, both paths, same live engine state."""
+    lemon = lemon_operator(SMALL, WIDE)
+    ligo = init_ligo_params(jax.random.PRNGKey(7), SMALL, BIG)
+    grown_big = plan_for(SMALL, BIG, params).executor(mesh=None)(
+        ligo, params)
+    _prewarm(((params, SMALL), (grown_big, BIG)), slots=slots,
+             prompt_budget=prompt_budget, gen_budget=gen_budget)
+
+    eng = _make_engine(params, SMALL, slots=slots,
+                       prompt_budget=prompt_budget, gen_budget=gen_budget,
+                       n_req=slots)
+    for _ in range(6):
+        eng.step()                               # sessions mid-generation
+    live = len(eng.live)
+
+    def time_med(fn):
+        jax.block_until_ready(fn())              # warm/compile
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        return sorted(ts)[len(ts) // 2] * 1e3
+
+    in_place = time_med(
+        lambda: grow_decode_state(eng.state, lemon, SMALL, WIDE))
+    reprefill = time_med(lambda: eng.reprefill_state(grown_big, BIG))
+    entries.extend([
+        {"name": "cache_grow[serve,lossless]/in_place",
+         "wall_ms": round(in_place, 3), "est_hbm_bytes": None,
+         "note": f"grow {live} live sessions' KV caches in place via the "
+                 f"zero-pad width expanders ({SMALL.name} -> {WIDE.name}); "
+                 "bit-exact, no forward pass"},
+        {"name": "cache_grow[serve]/reprefill",
+         "wall_ms": round(reprefill, 3), "est_hbm_bytes": None,
+         "note": f"re-prefill {live} live sessions' token histories under "
+                 f"the grown weights ({SMALL.name} -> {BIG.name}); the "
+                 "universal fallback — one prompt-length forward per "
+                 "session"},
+    ])
+    speedups["cache_grow"] = {
+        "in_place_ms": round(in_place, 3),
+        "reprefill_ms": round(reprefill, 3),
+        "in_place_vs_reprefill": round(reprefill / in_place, 3),
+        "live_sessions": live,
+    }
+
+
+def merge_into_bench(entries: List[Dict], speedups: Dict,
+                     path: Optional[str] = None) -> Dict:
+    """Read-update-write: replace same-named entries, update speedup keys.
+
+    ``bench_growth.engine_bench`` rewrites the whole file; this merge keeps
+    serving entries additive so the two benchmarks compose in any order.
+    """
+    path = path or BENCH_JSON
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    else:
+        data = {"backend": jax.default_backend(), "entries": [],
+                "speedup": {}}
+    names = {e["name"] for e in entries}
+    data["entries"] = ([e for e in data.get("entries", [])
+                        if e["name"] not in names] + entries)
+    data.setdefault("speedup", {}).update(speedups)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+    return data
+
+
+def bench_serving(quick: bool = False,
+                  out_path: Optional[str] = None) -> Dict:
+    entries: List[Dict] = []
+    speedups: Dict = {}
+    params = init_params(SMALL, jax.random.PRNGKey(0))
+    kw = (dict(slots=4, prompt_budget=16, gen_budget=24, n_req=8, hop_at=6)
+          if quick else {})
+    _bench_live_hop(params, lemon_operator(SMALL, WIDE), WIDE, "lossless",
+                    entries=entries, speedups=speedups, **kw)
+    _bench_live_hop(params,
+                    init_ligo_params(jax.random.PRNGKey(7), SMALL, BIG),
+                    BIG, "ligo", entries=entries, speedups=speedups, **kw)
+    ckw = (dict(slots=4, prompt_budget=16, gen_budget=24, iters=3)
+           if quick else {})
+    _bench_cache_grow(params, entries=entries, speedups=speedups, **ckw)
+    merge_into_bench(entries, speedups, out_path)
+    print(f"[bench_serving] merged {len(entries)} entries into "
+          f"{out_path or BENCH_JSON}")
+    for e in entries:
+        print(f"  {e['name']:48s} {e['wall_ms']:9.2f} ms")
+    for k, v in speedups.items():
+        print(f"  speedup[{k}]: {v}")
+    return {"entries": entries, "speedup": speedups}
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    bench_serving(quick=args.quick, out_path=args.out)

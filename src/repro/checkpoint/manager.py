@@ -2,6 +2,10 @@
 
 - ``save(step, tree, meta)``: snapshot to host (cheap device_get) then write
   on a background thread; the train loop never blocks on disk.
+  ``snapshot="device"`` instead enqueues an async device-to-device copy and
+  moves the device→host transfer onto the write thread too — the elastic
+  LiGO phase uses it to keep chunk-boundary checkpoints off the critical
+  path.
 - retention: keep the newest ``keep`` checkpoints.
 - ``restore_latest(template, shardings=None)``: loads into any mesh — arrays
   are ``jax.device_put`` with the *target* sharding, so a job checkpointed on
@@ -30,15 +34,36 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------
     def save(self, step: int, tree: Params, meta: Optional[Dict] = None,
-             *, block: bool = False) -> None:
-        host_flat = io.flatten_tree(tree)   # synchronous device->host snapshot
+             *, block: bool = False, snapshot: str = "host") -> None:
+        """``snapshot`` picks how the tree is pinned before the async write:
+
+        - ``"host"`` (default): synchronous device→host copy up front — the
+          caller can mutate or donate the tree the moment ``save`` returns,
+          but the critical path pays the full transfer.
+        - ``"device"``: double-buffered async device-to-device snapshot —
+          ``jnp.copy`` only *enqueues* the copy, so the critical path
+          resumes immediately; the device→host transfer and flatten happen
+          on the write thread. The copy is ordered before any later op that
+          touches the source buffers (single device stream), so the bytes
+          written are exactly the bytes at call time — kill+resume
+          bit-equality is preserved. ``wait()`` (called at the top of the
+          next save) retires the previous snapshot buffer.
+        """
+        assert snapshot in ("host", "device"), snapshot
         self.wait()                          # one write in flight at a time
+        if snapshot == "device":
+            import jax.numpy as jnp
+            snap = jax.tree.map(jnp.copy, tree)
+            payload = lambda: io.flatten_tree(snap)  # noqa: E731
+        else:
+            host_flat = io.flatten_tree(tree)  # sync device->host snapshot
+            payload = lambda: host_flat        # noqa: E731
 
         def write():
             try:
                 import os
                 import shutil
-                io.save_step(self.dir, step, host_flat, meta)
+                io.save_step(self.dir, step, payload(), meta)
                 steps = io.list_steps(self.dir)
                 for s in steps[:-self.keep]:
                     shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),

@@ -9,11 +9,14 @@ from repro.core.ligo import (apply_ligo, count_ligo_params, gamma_expand,
                              init_ligo_params, interp_pattern, stack_pattern)
 from repro.core.grow import TRACE_COUNTS, grow, ligo_loss, train_ligo
 from repro.core.plan import (GrowthPlan, compose_chain, compose_ligo,
-                             plan_for)
-from repro.core import operators, spec
+                             place_operator, plan_for)
+from repro.core.grow_cache import (CacheGrowthError, grow_decode_state,
+                                   is_lossless_operator)
+from repro.core import grow_cache, operators, spec
 
 __all__ = ["apply_ligo", "init_ligo_params", "count_ligo_params",
            "gamma_expand", "stack_pattern", "interp_pattern", "grow",
            "ligo_loss", "train_ligo", "GrowthPlan", "plan_for",
-           "compose_ligo", "compose_chain", "TRACE_COUNTS", "operators",
-           "spec"]
+           "compose_ligo", "compose_chain", "place_operator",
+           "TRACE_COUNTS", "operators", "spec", "grow_cache",
+           "CacheGrowthError", "grow_decode_state", "is_lossless_operator"]

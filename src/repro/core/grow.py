@@ -184,12 +184,16 @@ def train_ligo(ligo, small_params, cfg1: ModelConfig, cfg2: ModelConfig,
         if (phase_ckpt is not None and done < steps
                 and (chunks_done % max(checkpoint_every_chunks, 1) == 0
                      or failing)):
-            # async carry snapshot; CheckpointManager device_gets before the
-            # background write, so the next chunk may donate these buffers.
-            # An injected failure forces the save even off-cadence: the
-            # chaos contract is "checkpoint durably written, then die".
+            # double-buffered async snapshot: jnp.copy enqueues a
+            # device-to-device copy (ordered before any later op touching
+            # the carry, so the next chunk may donate these buffers) and
+            # the device->host transfer runs on the write thread — the
+            # chunk loop never blocks on the copy-out. An injected failure
+            # forces the save even off-cadence: the chaos contract is
+            # "checkpoint durably written, then die".
             phase_ckpt.save(done, {"ligo": ligo, "mom": mom},
-                            {**pid, "phase_step": done, "losses": losses})
+                            {**pid, "phase_step": done, "losses": losses},
+                            snapshot="device")
         if failing:
             if phase_ckpt is not None:
                 phase_ckpt.wait()          # the injected kill must be durable

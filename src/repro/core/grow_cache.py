@@ -1,0 +1,157 @@
+"""KV-cache growth: migrate live decode state across an architecture hop.
+
+The serving engine's live hop (``repro.serving``) swaps grown weights in
+between two decode steps. In-flight sessions keep their per-slot K/V caches,
+so the cache must be grown with the *same* operator as the weights or the
+first post-hop attention read is garbage.
+
+The rule falls out of the LiGO algebra: a cached key row is an activation
+``k = x·Wk`` reshaped to ``(n_kv_heads, d_head)``. Growing ``Wk`` with the
+out-expander ``E_k`` (``vec(Wk_big) = ... E_k``) means the grown activation
+is ``k_big = E_k · k`` over the flattened ``(KV·dh)`` axis — the GrowthPlan
+expander applied per cached position, for every position at once:
+
+    K_big[l, b, s] = E_k @ K[l, b, s].reshape(KV1*dh1)
+
+Depth blends average *layers*; a blended cache only equals the grown model's
+own prefill when the blend is the identity, so the in-place rule is lossless
+exactly for LEMON-style zero-pad operators (``operators.lemon_operator`` is
+the bit-exactness oracle). Everything else — learned LiGO, depth growth,
+SSM/hybrid recurrent state — takes the universal fallback: re-prefill the
+session's token history under the grown weights (the engine keeps the
+history for exactly this reason).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.ligo import _flatten, resolve_expander
+
+
+class CacheGrowthError(RuntimeError):
+    """A decode state cannot be grown in place — re-prefill the session."""
+
+
+def can_grow_cache(cfg1: ModelConfig, cfg2: ModelConfig) -> bool:
+    """Static eligibility: families whose whole decode state is one stacked
+    attention K/V cache. SSM conv/state and hybrid caches have no linear
+    growth rule (the recurrence mixes channels nonlinearly), and a changed
+    attention window changes the cache budget — both re-prefill."""
+    return (cfg1.family in ("dense", "moe", "vlm")
+            and cfg2.family == cfg1.family
+            and cfg1.window == cfg2.window)
+
+
+def is_lossless_operator(ligo: Dict, cfg1: ModelConfig,
+                         cfg2: ModelConfig) -> bool:
+    """True iff ``ligo`` is a LEMON-style zero-pad operator, i.e. growing
+    with it is bitwise function-preserving (see ``operators.lemon_operator``
+    for why each condition is load-bearing).
+
+    Checks concrete host values — call it outside jit (the hop controller
+    does; it decides grow-vs-reprefill before launching any compiled work).
+    """
+    if (cfg1.d_model != cfg2.d_model or cfg1.d_head != cfg2.d_head
+            or cfg1.n_layers != cfg2.n_layers):
+        return False
+    heads_grow = (cfg1.n_heads != cfg2.n_heads
+                  or cfg1.n_kv_heads != cfg2.n_kv_heads)
+    if heads_grow and not (cfg1.n_heads == cfg1.n_kv_heads
+                           and cfg2.n_heads == cfg2.n_kv_heads):
+        return False
+    for name, E in _flatten(ligo.get("width", {})).items():
+        E = np.asarray(E)
+        if E.ndim != 2:
+            return False
+        d2, d1 = E.shape
+        if not np.array_equal(E[:d1], np.eye(d1)):
+            return False
+        if d2 > d1 and np.any(E[d1:]):
+            return False
+    for kind, leaves in ligo.get("depth", {}).items():
+        for leaf, w in leaves.items():
+            w = np.asarray(w)
+            if w.shape[0] != w.shape[1] or not np.array_equal(
+                    w, np.eye(w.shape[0])):
+                return False
+    return True
+
+
+def kv_cache_expanders(ligo: Dict, cfg1: ModelConfig, cfg2: ModelConfig):
+    """The (KV2·dh2, KV1·dh1) out-expanders for cached K and V — the same
+    matrices the GrowthPlan applies to ``wk``/``wv`` columns."""
+    width = ligo["width"]
+    E_k = resolve_expander("k", width, cfg1, cfg2, "out")
+    E_v = resolve_expander("v", width, cfg1, cfg2, "out")
+    return E_k, E_v
+
+
+def _expand_kv(C: jax.Array, E: jax.Array, cfg2: ModelConfig) -> jax.Array:
+    """Apply a flat-kv-space expander per cached position:
+    (lead, B, S, KV1, dh1) → (lead, B, S, KV2, dh2)."""
+    lead = C.shape[:-2]
+    flat = C.reshape(lead + (-1,))
+    out = jnp.einsum("...i,oi->...o", flat.astype(jnp.float32),
+                     jnp.asarray(E, jnp.float32))
+    return out.astype(C.dtype).reshape(
+        lead + (cfg2.n_kv_heads, cfg2.d_head))
+
+
+def grow_attn_caches(caches: Dict[str, jax.Array], ligo: Dict,
+                     cfg1: ModelConfig, cfg2: ModelConfig, *,
+                     depth: str = "strict") -> Dict[str, jax.Array]:
+    """Grow a stacked attention cache ``{"k","v"}: (L1,B,S,KV1,dh1)`` to the
+    big architecture. ``depth="strict"`` (the serving default) refuses
+    non-identity depth blends — a blended cache is an approximation, and the
+    engine's re-prefill fallback is both exact and cheap at serving sequence
+    lengths. ``depth="blend"`` applies the operator's ``wk``/``wv`` layer
+    blends anyway (benchmarks, experiments)."""
+    E_k, E_v = kv_cache_expanders(ligo, cfg1, cfg2)
+    kind = cfg1.blocks[0]
+    dwk = np.asarray(ligo["depth"][kind]["wk"])
+    dwv = np.asarray(ligo["depth"][kind]["wv"])
+    identity = (cfg1.n_layers == cfg2.n_layers
+                and np.array_equal(dwk, np.eye(cfg1.n_layers))
+                and np.array_equal(dwv, np.eye(cfg1.n_layers)))
+    if not identity and depth != "blend":
+        raise CacheGrowthError(
+            "non-identity depth blend is not lossless for cached "
+            "activations; re-prefill the session history instead")
+    k = _expand_kv(caches["k"], E_k, cfg2)
+    v = _expand_kv(caches["v"], E_v, cfg2)
+    if not identity:
+        k = jnp.einsum("kl,l...->k...", jnp.asarray(dwk, jnp.float32),
+                       k.astype(jnp.float32)).astype(k.dtype)
+        v = jnp.einsum("kl,l...->k...", jnp.asarray(dwv, jnp.float32),
+                       v.astype(jnp.float32)).astype(v.dtype)
+    return {"k": k, "v": v}
+
+
+def grow_decode_state(state: Dict[str, Any], ligo: Dict, cfg1: ModelConfig,
+                      cfg2: ModelConfig, *, depth: str = "strict",
+                      mesh=None) -> Dict[str, Any]:
+    """Grow a live decode state (``init_decode_state`` layout) in place of a
+    re-prefill. Raises :class:`CacheGrowthError` whenever the in-place rule
+    does not apply — callers treat that as "re-prefill this session".
+
+    With ``mesh``, the grown caches land carrying the ``state_pspecs``
+    shardings for the *big* config, ready for the grown decode step."""
+    if not can_grow_cache(cfg1, cfg2):
+        raise CacheGrowthError(
+            f"family {cfg1.family!r} (window={cfg1.window}->{cfg2.window}): "
+            "no in-place cache growth rule; re-prefill")
+    new_caches = grow_attn_caches(state["caches"], ligo, cfg1, cfg2,
+                                  depth=depth)
+    new_state = {"caches": new_caches, "pos": state["pos"]}
+    if mesh is not None:
+        from repro.distributed.sharding import named_shardings, state_pspecs
+        ps = state_pspecs(new_state, cfg2,
+                          model_size=mesh.shape.get("model", 1),
+                          dp_size=mesh.shape.get("data", 1))
+        new_state = jax.device_put(new_state, named_shardings(ps, mesh))
+    return new_state

@@ -132,6 +132,53 @@ def bert2bert_operator(key, cfg1: ModelConfig, cfg2: ModelConfig) -> Dict:
     return net2net_operator(key, cfg1, cfg2, depth="stack")
 
 
+def lemon_operator(cfg1: ModelConfig, cfg2: ModelConfig) -> Dict:
+    """LEMON-style lossless zero-pad expansion [I; 0] (Wang et al. 2023).
+
+    Every width expander is the zero-padded identity, so new heads/neurons
+    compute exactly 0 and contribute exactly 0 to every downstream
+    contraction — the grown model is *bitwise* function-preserving, which
+    makes this the exactness oracle for KV-cache growth
+    (``core/grow_cache.py``).
+
+    Losslessness imposes hard structural constraints; violating any of them
+    silently changes the function, so they are errors here:
+
+    - equal ``d_model`` (a wider residual stream changes every RMS/LayerNorm
+      denominator),
+    - equal ``d_head`` (RoPE and the 1/sqrt(d_head) scale act per-head),
+    - equal ``n_layers`` (depth blends average layers; identity only),
+    - MHA on both sides, or heads unchanged: under GQA the ``wo``
+      in-expander averages query heads within a kv group (``gamma_expand``'s
+      1/G fan-in), which is not function-preserving for zero-padded heads.
+    """
+    S.check_growable(cfg1, cfg2)
+    if cfg1.d_model != cfg2.d_model:
+        raise ValueError("lemon_operator: d_model must match "
+                         f"({cfg1.d_model} vs {cfg2.d_model}) — residual "
+                         "widening changes norm denominators")
+    if cfg1.d_head != cfg2.d_head:
+        raise ValueError("lemon_operator: d_head must match "
+                         f"({cfg1.d_head} vs {cfg2.d_head})")
+    if cfg1.n_layers != cfg2.n_layers:
+        raise ValueError("lemon_operator: depth growth is not lossless "
+                         f"({cfg1.n_layers} vs {cfg2.n_layers} layers); "
+                         "grow depth separately and re-prefill")
+    heads_grow = (cfg1.n_heads != cfg2.n_heads
+                  or cfg1.n_kv_heads != cfg2.n_kv_heads)
+    if heads_grow and not (cfg1.n_heads == cfg1.n_kv_heads
+                           and cfg2.n_heads == cfg2.n_kv_heads):
+        raise ValueError("lemon_operator: head growth is lossless only for "
+                         "MHA (n_kv_heads == n_heads on both sides)")
+    d1s, d2s = S.width_dims(cfg1), S.width_dims(cfg2)
+    # jnp.eye(d2, d1) is exactly [I; 0]: identity block on top, zero rows
+    # below. The same matrix serves both roles — zero *rows* kill new
+    # out-features, zero in-rows drop the (all-zero) new in-features.
+    width = {n: jnp.eye(d2s[n], d1s[n]) for n in d2s}
+    identity = lambda L2, L1: jnp.eye(L1)  # noqa: E731 (equal layer counts)
+    return {"width": width, "depth": _depth(cfg1, cfg2, identity)}
+
+
 # ---------------------------------------------------------------------------
 # Direct formulas (oracles for the Prop.-1 equality tests)
 # ---------------------------------------------------------------------------

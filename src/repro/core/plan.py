@@ -301,13 +301,19 @@ class GrowthPlan:
         return P
 
     def apply(self, ligo, small, *, use_kernel: Optional[bool] = None,
-              mesh: Optional[Mesh] = None, square: bool = False):
+              mesh: Optional[Mesh] = None, square: bool = False,
+              constrain_groups: bool = True):
         """Θ_large = M(Θ_small) — plan-driven, differentiable in both args.
 
         With a ``mesh``, each group's stacked contraction carries the
         ``params_pspecs``-derived sharding constraint and the fused path runs
         under ``shard_map`` — see :meth:`executor` for the fully-sharded
         (``in_shardings``/``out_shardings``) entry point.
+        ``constrain_groups=False`` drops the per-group constraints; only
+        correct when the caller pins the outputs itself (``executor(mesh=)``
+        does, via ``out_shardings`` — re-constraining every stacked group
+        mid-program forced an extra resharding per group, the bulk of the
+        8-device apply regression).
 
         ``square=True`` squares every resolved expander and depth blend
         elementwise after resolution — the AdamW second-moment map (the
@@ -316,7 +322,8 @@ class GrowthPlan:
         """
         if use_kernel is None:
             use_kernel = jax.default_backend() == "tpu"
-        group_sh = (self._group_shardings(mesh) if mesh is not None else None)
+        group_sh = (self._group_shardings(mesh)
+                    if mesh is not None and constrain_groups else None)
         width = ligo["width"]
         depth = ligo.get("depth", {})
         table = self._expander_table(width)
@@ -372,12 +379,17 @@ class GrowthPlan:
         """
         key = (use_kernel, mesh, square)
         if key not in self._executors:
-            fn = functools.partial(GrowthPlan.apply, self,
-                                   use_kernel=use_kernel, mesh=mesh,
-                                   square=square)
             if mesh is None:
+                fn = functools.partial(GrowthPlan.apply, self,
+                                       use_kernel=use_kernel, square=square)
                 self._executors[key] = jax.jit(fn)
             else:
+                # out_shardings already pin every grown leaf; the per-group
+                # with_sharding_constraint would only force an extra
+                # resharding per stacked group inside the program.
+                fn = functools.partial(GrowthPlan.apply, self,
+                                       use_kernel=use_kernel, mesh=mesh,
+                                       square=square, constrain_groups=False)
                 ligo_sh, small_sh, big_sh = self.shardings(mesh)
                 self._executors[key] = jax.jit(
                     fn, in_shardings=(ligo_sh, small_sh),
@@ -535,6 +547,19 @@ def _build_plan(cfg1: ModelConfig, cfg2: ModelConfig, sig) -> GrowthPlan:
 def plan_for(cfg1: ModelConfig, cfg2: ModelConfig, small) -> GrowthPlan:
     """The (memoised) GrowthPlan for growing ``small`` from cfg1 to cfg2."""
     return _build_plan(cfg1, cfg2, _tree_signature(small))
+
+
+def place_operator(ligo: Dict, mesh: Mesh) -> Dict:
+    """Replicate an operator tree onto ``mesh`` ahead of the apply.
+
+    ``executor(mesh=)`` declares the LiGO tree replicated via
+    ``in_shardings``; feeding it host (or single-device) arrays makes every
+    apply pay the full broadcast on its own critical path. Hot paths — the
+    serving hop, the sharded-apply benchmark — call this once and reuse the
+    device-resident tree across applies (and across the executor cache's
+    ``square`` variants, which share the same replicated placement)."""
+    sh = NamedSharding(mesh, PartitionSpec())
+    return jax.device_put(ligo, jax.tree.map(lambda _: sh, ligo))
 
 
 # ---------------------------------------------------------------------------

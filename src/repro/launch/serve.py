@@ -3,6 +3,11 @@
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --smoke \\
         --batch 4 --prompt-len 64 --gen 32
 
+``--ckpt DIR`` serves trained weights: the newest checkpoint restores
+sharded through ``CheckpointManager`` (arrays ``device_put`` with the
+``params_pspecs`` shardings for the serving mesh); without it the driver
+serves fresh ``init_params`` at smoke scale.
+
 Growth-time elastic serving: ``--grow-to <arch>`` (or the shorthand ``2x``
 for a doubled-depth/1.5×-width target of the same family) hot-grows the
 loaded checkpoint at startup through the compiled GrowthPlan executor
@@ -13,6 +18,15 @@ a single dispatch (~ms), cheap enough to run per serving process. The growth
 itself runs *sharded* under the serving mesh (in/out shardings from
 ``params_pspecs``), so growing to an 8B+ target never funnels the tree
 through one device.
+
+**Zero-downtime live growth**: ``--live-grow-at N`` serves through the
+continuous-batching engine (``repro.serving``) and hops to the ``--grow-to``
+target after N decode steps *while serving*: grown params materialise
+double-buffered in the background, live sessions' KV caches migrate
+(in-place growth when the operator is lossless, re-prefill otherwise), and
+the buffers swap atomically between decode steps. A failed hop (inject one
+with ``--fail-at-hop grow|cache-grow|swap|hang``) rolls back and retries
+with backoff; in-flight requests never drop either way.
 
 On the production mesh, params are FSDP+TP sharded and the KV cache is
 sequence- or head-sharded per repro.distributed.sharding.state_pspecs; on CPU
@@ -107,6 +121,96 @@ def hot_grow(params, cfg, target: str, *, smoke: bool = False, seed: int = 1,
     return grown, cfg2
 
 
+def _restore_ckpt(ckpt_dir: str, cfg, mesh):
+    """Restore the newest checkpoint in ``ckpt_dir`` sharded for serving.
+
+    Arrays land ``device_put`` with the ``params_pspecs`` shardings for this
+    mesh (elastic: the save-time mesh is irrelevant). Accepts both the
+    trainer layout ``{"params", "opt"}`` (optimizer state ignored) and a
+    bare params tree."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.distributed.sharding import named_shardings, params_pspecs
+    mgr = CheckpointManager(ckpt_dir)
+    step = mgr.latest_step()
+    if step is None:
+        raise SystemExit(f"--ckpt {ckpt_dir}: no checkpoint found")
+    tmpl = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    ps = params_pspecs(tmpl, model_size=mesh.shape.get("model", 1),
+                       dp_size=mesh.shape.get("data", 1))
+    sh = named_shardings(ps, mesh)
+    try:
+        tree, meta = mgr.restore(step, {"params": tmpl}, {"params": sh})
+        params = tree["params"]
+    except KeyError:
+        params, meta = mgr.restore(step, tmpl, sh)
+    print(f"[serve] restored step-{step} checkpoint from {ckpt_dir} "
+          f"for {cfg.name} (sharded via params_pspecs)")
+    return params
+
+
+def _serve_live(args, cfg, params, mesh):
+    """Engine-backed serving with a mid-serve hop (``--live-grow-at``)."""
+    from repro.core import compose_chain, init_ligo_params
+    from repro.serving import HopController, ServingEngine
+    if cfg.modality != "text":
+        raise SystemExit(f"--live-grow-at: {cfg.name} is not a token model")
+    chain = [cfg] + _target_chain(cfg, args.grow_to or "2x",
+                                  smoke=args.smoke)
+    ops = [init_ligo_params(jax.random.PRNGKey(1 + i), a, b)
+           for i, (a, b) in enumerate(zip(chain[:-1], chain[1:]))]
+    ligo = compose_chain(ops, chain)
+    cfg2 = chain[-1]
+
+    engine = ServingEngine(params, cfg, slots=args.batch,
+                           prompt_budget=args.prompt_len,
+                           gen_budget=args.gen,
+                           queue_capacity=args.queue_cap, mesh=mesh)
+    hop = HopController(engine, cfg2, ligo, cache_mode=args.cache_mode,
+                        fail_at=args.fail_at_hop, retries=args.hop_retries,
+                        timeout=args.hop_timeout,
+                        background=not args.hop_sync)
+    n_req = args.requests or args.batch * 2
+    rng = np.random.RandomState(0)
+    prompts = np.asarray(gen_tokens(0, 0, n_req, args.prompt_len,
+                                    cfg.vocab_size))
+    for r in range(n_req):
+        plen = int(rng.randint(max(2, args.prompt_len // 2),
+                               args.prompt_len + 1))
+        engine.submit(list(prompts[r, :plen]), max_new=args.gen)
+
+    t0 = time.perf_counter()
+
+    def on_step(eng):
+        if eng.decode_steps >= args.live_grow_at and hop.attempts == 0:
+            hop.begin()
+        if hop.attempts:
+            hop.poll()
+
+    engine.run(on_step=on_step)
+    if hop.attempts == 0:        # queue drained before the trigger step
+        hop.begin()
+    while not hop.poll():
+        time.sleep(0.002)
+    wall = time.perf_counter() - t0
+
+    c = engine.counts()
+    times = np.asarray(engine.step_times_ms)
+    total = sum(len(r.tokens) for r in engine.requests
+                if r.status == "done")
+    p50, p99 = (np.percentile(times, [50, 99]) if times.size
+                else (0.0, 0.0))
+    print(f"[serve] live-hop serve: arch={cfg.name} -> "
+          f"{cfg2.name if hop.completed else cfg.name} slots={args.batch} "
+          f"requests={n_req}")
+    print(f"[serve] {c['done']} done, {c['rejected']} rejected, "
+          f"{c['dropped']} dropped | hop "
+          f"{'complete' if hop.completed else 'FAILED (gave up)'} "
+          f"(cache: {hop.cache_path}, attempts {hop.attempts})")
+    print(f"[serve] {total} tokens in {wall:.2f} s | "
+          f"{total / max(wall, 1e-9):.1f} tok/s | decode p50 "
+          f"{p50:.1f} ms p99 {p99:.1f} ms (through the hop)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -117,6 +221,35 @@ def main():
     ap.add_argument("--mesh", default="host",
                     choices=["host", "single", "multi"])
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--ckpt", default=None, metavar="DIR",
+                    help="serve the newest checkpoint in DIR (restored "
+                         "sharded via params_pspecs) instead of init_params")
+    ap.add_argument("--live-grow-at", type=int, default=None, metavar="N",
+                    help="serve through the continuous-batching engine and "
+                         "hop to the --grow-to target after N decode steps "
+                         "WITHOUT stopping: params grow double-buffered in "
+                         "the background, live KV caches migrate, buffers "
+                         "swap between decode steps")
+    ap.add_argument("--fail-at-hop", default=None,
+                    choices=["grow", "cache-grow", "swap", "hang"],
+                    help="chaos hook: inject a one-shot failure at this hop "
+                         "stage (the hop rolls back, then retries clean)")
+    ap.add_argument("--hop-retries", type=int, default=2)
+    ap.add_argument("--hop-timeout", type=float, default=120.0,
+                    help="hop watchdog hard budget (seconds) for the grow "
+                         "stage")
+    ap.add_argument("--hop-sync", action="store_true",
+                    help="run the grow stage synchronously instead of "
+                         "overlapped with decoding (deterministic timing)")
+    ap.add_argument("--cache-mode", default="auto",
+                    choices=["auto", "grow", "reprefill"],
+                    help="live-hop KV-cache migration: auto = in-place "
+                         "growth iff the operator is provably lossless, "
+                         "else re-prefill each session's history")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="number of requests to serve on the live path "
+                         "(default 2x slots)")
+    ap.add_argument("--queue-cap", type=int, default=64)
     ap.add_argument("--grow-to", default=None, metavar="ARCH[,ARCH...]",
                     help="hot-grow the checkpoint to this arch (or '2x' for "
                          "a doubled-depth/1.5x-width same-family target) at "
@@ -141,7 +274,13 @@ def main():
             else make_production_mesh(multi_pod=(args.mesh == "multi")))
 
     with compat.set_mesh(mesh):
-        params = init_params(cfg, jax.random.PRNGKey(0))
+        if args.ckpt:
+            params = _restore_ckpt(args.ckpt, cfg, mesh)
+        else:
+            params = init_params(cfg, jax.random.PRNGKey(0))
+        if args.live_grow_at is not None:
+            _serve_live(args, cfg, params, mesh)
+            return
         if args.grow_to:
             params, cfg = hot_grow(params, cfg, args.grow_to,
                                    smoke=args.smoke)

@@ -88,10 +88,18 @@ def apply_attn(p, x, cfg, positions, *, mode: str = "train",
         S = cache["k"].shape[1]
         ring = bool(cfg.window) and S == cfg.window
         slot = ((cur_len - 1) % S if ring else (cur_len - 1)).astype(jnp.int32)
-        k_cache = jax.lax.dynamic_update_slice(
-            cache["k"], k, (0, slot, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(
-            cache["v"], v, (0, slot, 0, 0))
+        if slot.ndim:
+            # per-slot write positions (continuous batching): each batch row
+            # lands its token at its own sequence offset
+            upd = jax.vmap(
+                lambda c, u, s: jax.lax.dynamic_update_slice(c, u, (s, 0, 0)))
+            k_cache = upd(cache["k"], k, slot)
+            v_cache = upd(cache["v"], v, slot)
+        else:
+            k_cache = jax.lax.dynamic_update_slice(
+                cache["k"], k, (0, slot, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                cache["v"], v, (0, slot, 0, 0))
         o = decode_attention(q, k_cache, v_cache, cur_len,
                              window=cfg.window, ring=ring)
         new_cache = {"k": k_cache, "v": v_cache}

@@ -193,10 +193,12 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      ring: bool = False) -> jax.Array:
     """Single-step attention over a KV cache.
 
-    q: (B, 1, H, dh); k_cache/v_cache: (B, S, KV, dh); cur_len: () int32 — number
-    of valid cache entries *including* the current token. With ``ring=True`` the
-    cache is a ring buffer of size S == window (positions wrap; masking is by
-    validity only since every live entry is inside the window by construction).
+    q: (B, 1, H, dh); k_cache/v_cache: (B, S, KV, dh); cur_len: () or (B,)
+    int32 — number of valid cache entries *including* the current token (a
+    (B,) vector gives every batch slot its own length — continuous batching).
+    With ``ring=True`` the cache is a ring buffer of size S == window
+    (positions wrap; masking is by validity only since every live entry is
+    inside the window by construction).
     """
     B, _, H, dh = q.shape
     S, KV = k_cache.shape[1], k_cache.shape[2]
@@ -206,10 +208,11 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
                    k_cache.astype(jnp.float32)) * scale            # (B,KV,G,S)
     idx = jnp.arange(S)
-    valid = idx < cur_len
+    cl = jnp.reshape(cur_len, (-1, 1))                             # (1|B, 1)
+    valid = idx[None, :] < cl                                      # (1|B, S)
     if window and not ring:
-        valid &= idx > cur_len - 1 - window
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+        valid &= idx[None, :] > cl - 1 - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
     return o.reshape(B, 1, H, dh).astype(q.dtype)

@@ -96,13 +96,16 @@ def embed(params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
             pe = batch["patch_embeds"].astype(x.dtype)
             np_ = pe.shape[1]
             x = jnp.concatenate([pe, x[:, np_:]], axis=1)
+    # offset: () for lock-step decode, (B,) for per-slot positions
+    # (continuous batching — each batch row at its own sequence offset)
+    off = jnp.asarray(offset)
     if cfg.rope == "learned":
-        idx = jnp.arange(T) + offset
+        idx = jnp.arange(T) + (off[:, None] if off.ndim else off)
         x = x + jnp.take(emb["pos"], idx, axis=0)
     if cfg.rope == "mrope":
         positions = batch["positions"]            # (B, T, 3)
-    else:
-        positions = jnp.arange(T)[None] + offset  # (1, T) broadcasting over B
+    else:                                         # (1|B, T), broadcasts over B
+        positions = jnp.arange(T)[None] + (off[:, None] if off.ndim else off)
     x = maybe_shard(x, P("data", None, None))
     return x, positions
 

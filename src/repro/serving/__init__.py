@@ -1,0 +1,16 @@
+"""Serving: continuous batching with zero-downtime live growth.
+
+``ServingEngine`` batches sessions at independent sequence positions into
+one decode program; ``HopController`` grows the model mid-serve — params
+double-buffered through the GrowthPlan executor, live KV caches migrated by
+``core.grow_cache`` (lossless in-place growth or re-prefill), buffers
+swapped atomically between decode steps, with chaos hooks / rollback /
+bounded retry / watchdog around the whole hop.
+"""
+from repro.serving.admission import AdmissionQueue, Request
+from repro.serving.engine import ServingEngine, make_serving_fns
+from repro.serving.hotswap import (HopController, HopError, HopWatchdog,
+                                   STAGES)
+
+__all__ = ["AdmissionQueue", "Request", "ServingEngine", "make_serving_fns",
+           "HopController", "HopError", "HopWatchdog", "STAGES"]

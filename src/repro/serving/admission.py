@@ -1,0 +1,67 @@
+"""Admission control for the serving engine: a bounded request queue.
+
+Backpressure is a rejection at the door, never a drop after admission — an
+admitted request either finishes or survives every hop (the engine's
+rollback guarantee only has to cover requests past this gate).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+_UIDS = itertools.count()
+
+
+@dataclass
+class Request:
+    """One generation session: prompt in, tokens accumulated per decode step.
+
+    The full token history (``prompt + tokens``) is retained while the
+    session is live — it is the universal fallback for cache migration
+    (re-prefill under grown weights) and the payload returned to the user.
+    """
+    prompt: List[int]
+    max_new: int
+    uid: int = field(default_factory=lambda: next(_UIDS))
+    tokens: List[int] = field(default_factory=list)
+    status: str = "queued"          # queued|running|done|rejected
+    slot: int = -1
+    true_len: int = 0               # prompt length at prefill time
+    t_submit: float = 0.0
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def text_tokens(self) -> List[int]:
+        return list(self.prompt) + list(self.tokens)
+
+
+class AdmissionQueue:
+    """Bounded FIFO with thread-safe submit (the driver may submit while a
+    background grow is in flight)."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._q: deque = deque()
+        self._lock = threading.Lock()
+        self.rejected = 0
+
+    def submit(self, req: Request) -> bool:
+        with self._lock:
+            if len(self._q) >= self.capacity:
+                self.rejected += 1
+                req.status = "rejected"
+                return False
+            self._q.append(req)
+            return True
+
+    def pop(self) -> Optional[Request]:
+        with self._lock:
+            return self._q.popleft() if self._q else None
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._q)

@@ -1,0 +1,220 @@
+"""Continuous-batching serving engine with a hot-swappable model.
+
+One fixed block of ``slots`` batch rows shares a single decode program;
+every row carries its own position (``state["pos"]``: (slots,) int32), so
+sessions prefill into free rows and decode in lock-step regardless of where
+each one is in its sequence. Scheduling per step: admit waiting requests
+into free slots (one prefill each), then advance every live slot one token.
+
+The engine's serving buffers — ``(cfg, params, state)`` plus the jitted
+prefill/decode/insert programs — are swapped as a unit by
+:meth:`install`, which the hop controller (``repro.serving.hotswap``) calls
+between two decode steps. Nothing in the engine is mutated until the swap,
+so a hop aborted at any stage leaves it decoding the old weights untouched.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import (_pad_attn_caches, decode_step, forward,
+                                init_decode_state, unembed)
+from repro.serving.admission import AdmissionQueue, Request
+
+
+@functools.lru_cache(maxsize=16)
+def make_serving_fns(cfg: ModelConfig, max_len: int):
+    """(prefill_one, decode_many, insert) jitted for one architecture.
+
+    Memoised on ``(cfg, max_len)`` (configs are frozen dataclasses): a hop
+    back to an architecture the process has already served — or a second
+    engine on the same config — reuses the compiled programs instead of
+    re-tracing, so ``install`` costs reference flips, not compiles.
+
+    ``prefill_one`` takes a right-padded (1, Tp) prompt plus its true
+    length; padding positions write garbage cache entries *beyond* the
+    session's position, and decode overwrites each one exactly when it
+    becomes valid (slot ``cur_len-1``), so they are never attended to.
+    """
+    S_t = min(cfg.window, max_len) if cfg.window else max_len
+
+    @jax.jit
+    def prefill_one(params, tokens, true_len):
+        hidden, caches, _ = forward(params, cfg, {"tokens": tokens},
+                                    mode="prefill")
+        caches = _pad_attn_caches(caches, cfg, S_t)
+        logits = unembed(params, cfg,
+                         jnp.take(hidden[0], true_len - 1, axis=0))
+        return logits, caches
+
+    @jax.jit
+    def decode_many(params, state, tokens):
+        return decode_step(params, cfg, state, {"tokens": tokens})
+
+    @jax.jit
+    def insert(state, caches1, pos1, slot):
+        # every cache leaf (attn K/V, ssm conv/state) carries batch at axis 1
+        ins = lambda c, c1: jax.lax.dynamic_update_slice_in_dim(  # noqa: E731
+            c, c1, slot, axis=1)
+        return {"caches": jax.tree.map(ins, state["caches"], caches1),
+                "pos": state["pos"].at[slot].set(pos1)}
+
+    return prefill_one, decode_many, insert
+
+
+class ServingEngine:
+    """Continuous batching over ``slots`` sessions with admission control.
+
+    ``prompt_budget`` bounds admissible prompt length (longer → rejected at
+    the door); ``max_len = prompt_budget + gen_budget`` is each slot's cache
+    budget, and a request's ``max_new`` is clamped so it can never outrun
+    its slot.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
+                 prompt_budget: int = 64, gen_budget: int = 32,
+                 queue_capacity: int = 64, mesh=None):
+        self.slots = slots
+        self.prompt_budget = prompt_budget
+        self.max_len = prompt_budget + gen_budget
+        self.mesh = mesh
+        self.queue = AdmissionQueue(queue_capacity)
+        self.requests: List[Request] = []
+        self.slot_req: List[Optional[Request]] = [None] * slots
+        self.step_times_ms: List[float] = []
+        self.decode_steps = 0
+        self.install(cfg, params, None)
+
+    # -- serving buffers ----------------------------------------------------
+    def fresh_state(self, cfg: ModelConfig):
+        st = init_decode_state(cfg, self.slots, self.max_len)
+        return {"caches": st["caches"],
+                "pos": jnp.zeros((self.slots,), jnp.int32)}
+
+    def install(self, cfg: ModelConfig, params, state) -> None:
+        """Swap the serving buffers (the final act of a hop). The new jit
+        handles are created first, so the visible mutation is just reference
+        assignment between two decode steps."""
+        fns = make_serving_fns(cfg, self.max_len)
+        if state is None:
+            state = self.fresh_state(cfg)
+        self.cfg, self.params, self.state = cfg, params, state
+        self._prefill, self._decode, self._insert = fns
+
+    # -- request lifecycle --------------------------------------------------
+    def submit(self, prompt, max_new: int) -> Request:
+        req = Request(prompt=list(prompt), max_new=max_new)
+        req.t_submit = time.perf_counter()
+        self.requests.append(req)
+        if not (0 < len(req.prompt) <= self.prompt_budget):
+            req.status = "rejected"
+            self.queue.rejected += 1
+            return req
+        req.max_new = min(max_new, self.max_len - len(req.prompt))
+        self.queue.submit(req)
+        return req
+
+    @property
+    def live(self) -> List[Request]:
+        return [r for r in self.slot_req if r is not None]
+
+    def counts(self) -> Dict[str, int]:
+        c = {"done": 0, "running": 0, "queued": 0, "rejected": 0,
+             "dropped": 0}
+        for r in self.requests:
+            c[r.status] = c.get(r.status, 0) + 1
+        return c
+
+    def has_work(self) -> bool:
+        return bool(len(self.queue)) or any(
+            r is not None for r in self.slot_req)
+
+    # -- scheduling ---------------------------------------------------------
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self.slot_req[slot] is not None:
+                continue
+            req = self.queue.pop()
+            if req is None:
+                return
+            toks = np.zeros((1, self.prompt_budget), np.int32)
+            toks[0, :len(req.prompt)] = req.prompt
+            req.true_len = len(req.prompt)
+            logits, caches = self._prefill(self.params, jnp.asarray(toks),
+                                           jnp.asarray(req.true_len))
+            self.state = self._insert(self.state, caches,
+                                      jnp.asarray(req.true_len, jnp.int32),
+                                      jnp.asarray(slot, jnp.int32))
+            req.tokens.append(int(jnp.argmax(logits)))
+            req.t_first = time.perf_counter()
+            req.status, req.slot = "running", slot
+            self.slot_req[slot] = req
+            self._finish_if_done(req)
+
+    def _finish_if_done(self, req: Request) -> None:
+        if (len(req.tokens) >= req.max_new
+                or req.true_len + len(req.tokens) >= self.max_len):
+            req.status = "done"
+            req.t_done = time.perf_counter()
+            self.slot_req[req.slot] = None
+
+    def step(self) -> bool:
+        """One scheduling iteration. Returns True while work remains."""
+        self._admit()
+        active = [(i, r) for i, r in enumerate(self.slot_req)
+                  if r is not None]
+        if active:
+            last = np.zeros((self.slots, 1), np.int32)
+            for i, r in active:
+                last[i, 0] = r.tokens[-1]
+            t0 = time.perf_counter()
+            logits, self.state = self._decode(self.params, self.state,
+                                              jnp.asarray(last))
+            logits.block_until_ready()
+            self.step_times_ms.append((time.perf_counter() - t0) * 1e3)
+            self.decode_steps += 1
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            for i, r in active:
+                r.tokens.append(int(nxt[i]))
+                self._finish_if_done(r)
+        return self.has_work()
+
+    def run(self, *, on_step=None, max_steps: int = 100_000) -> None:
+        """Drain the queue; ``on_step(engine)`` runs between decode steps —
+        the hop controller's ``poll`` hooks in here."""
+        for _ in range(max_steps):
+            more = self.step()
+            if on_step is not None:
+                on_step(self)
+            if not more:
+                return
+        raise RuntimeError(f"engine did not drain in {max_steps} steps")
+
+    # -- cache migration fallback -------------------------------------------
+    def reprefill_state(self, params, cfg: ModelConfig):
+        """The universal cache-migration fallback: rebuild every live
+        session's decode state by re-running prefill over its token history
+        under ``params``/``cfg``. Exact by construction (it *is* the grown
+        model's own prefill), at the cost of one prompt-length forward per
+        live session."""
+        prefill_one, _, insert = make_serving_fns(cfg, self.max_len)
+        state = self.fresh_state(cfg)
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            # cache holds prompt + all generated tokens except the newest
+            # (decode writes its *input* token); same layout re-derived here
+            hist = (list(req.prompt) + list(req.tokens))[:-1]
+            toks = np.zeros((1, self.max_len), np.int32)
+            toks[0, :len(hist)] = hist
+            _, caches = prefill_one(params, jnp.asarray(toks),
+                                    jnp.asarray(len(hist)))
+            state = insert(state, caches, jnp.asarray(len(hist), jnp.int32),
+                           jnp.asarray(slot, jnp.int32))
+        return state

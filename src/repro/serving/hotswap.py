@@ -1,0 +1,249 @@
+"""The live hop: grow the serving model without dropping a session.
+
+Stage machine (driven by :meth:`HopController.poll` between decode steps):
+
+1. **grow** — materialise the grown params double-buffered through the
+   memoised ``GrowthPlan`` executor (operator pre-placed on the serving mesh
+   via ``place_operator``). Runs in a background thread by default, so the
+   old weights keep decoding; a ``HopWatchdog`` aborts a stuck grow.
+2. **cache-grow** — migrate live sessions' decode state: in place via
+   ``core.grow_cache`` when the operator is LEMON-lossless (bit-exact),
+   otherwise re-prefill each session's token history under the grown
+   weights (exact by construction).
+3. **swap** — ``engine.install`` flips the serving buffers between two
+   decode steps.
+
+Nothing touches the engine before stage 3, so any failure rolls back by
+discarding buffers: the engine keeps decoding the old weights and zero
+admitted requests are dropped. Failures retry (bounded, exponential
+backoff); ``fail_at`` injects a one-shot chaos failure at a named stage
+("grow" / "cache-grow" / "swap", or "hang" to wedge the grow thread and
+exercise the watchdog) — one-shot so the retry demonstrates recovery.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.grow_cache import (CacheGrowthError, can_grow_cache,
+                                   grow_decode_state, is_lossless_operator)
+from repro.core.plan import place_operator, plan_for
+
+STAGES = ("grow", "cache-grow", "swap")
+
+
+class HopError(RuntimeError):
+    """A hop stage failed (injected or real); the hop rolls back."""
+
+
+@dataclass
+class HopWatchdog:
+    """Deadline for the grow stage, tightened by what hops actually cost
+    (the ``StragglerWatchdog`` idiom: an EWMA of observed durations sets the
+    abort threshold, bounded by a hard ``timeout``)."""
+    timeout: float = 120.0
+    mult: float = 5.0
+    alpha: float = 0.5
+    ewma: Optional[float] = None
+
+    def budget(self) -> float:
+        if self.ewma is None:
+            return self.timeout
+        return min(self.timeout, max(0.05, self.mult * self.ewma))
+
+    def observe(self, dt: float) -> None:
+        self.ewma = dt if self.ewma is None else (
+            self.alpha * dt + (1 - self.alpha) * self.ewma)
+
+
+class HopController:
+    """Drives one live hop ``engine.cfg -> cfg2`` with operator ``ligo``.
+
+    ``begin()`` launches the grow; the engine's step loop calls ``poll()``
+    between decode steps, which advances the stage machine and performs
+    cache migration + swap synchronously once the grown buffer is ready.
+    ``cache_mode``: "auto" grows the cache in place iff the operator is
+    provably lossless, else re-prefills; "grow"/"reprefill" force a path.
+    """
+
+    def __init__(self, engine, cfg2: ModelConfig, ligo, *,
+                 cache_mode: str = "auto", fail_at: Optional[str] = None,
+                 retries: int = 2, backoff: float = 0.05,
+                 timeout: float = 120.0, background: bool = True):
+        assert cache_mode in ("auto", "grow", "reprefill"), cache_mode
+        assert fail_at in (None, "hang") + STAGES, fail_at
+        self.engine = engine
+        self.cfg2 = cfg2
+        self.ligo = ligo
+        self.cache_mode = cache_mode
+        self.fail_at = fail_at
+        self.retries = retries
+        self.backoff = backoff
+        self.background = background
+        self.watchdog = HopWatchdog(timeout=timeout)
+        self.attempts = 0
+        self.completed = False
+        self.failed = False
+        self.cache_path: Optional[str] = None
+        self.swap_at_step: Optional[int] = None
+        self.hop_ms: Optional[float] = None
+        self._gen = 0
+        self._lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._buf = None
+        self._err: Optional[Exception] = None
+        self._abort = threading.Event()
+        self._retry_at: Optional[float] = None
+        self._t_begin: Optional[float] = None
+        self._t_launch: Optional[float] = None
+
+    # -- chaos ---------------------------------------------------------------
+    def _chaos(self, stage: str) -> None:
+        if self.fail_at == stage:
+            self.fail_at = None        # one-shot: the retry gets through
+            raise HopError(f"injected failure at hop stage {stage!r}")
+
+    # -- stage 1: grow (double-buffered, optionally backgrounded) -----------
+    def _stage_grow(self, abort: threading.Event):
+        self._chaos("grow")
+        if self.fail_at == "hang":     # wedge until the watchdog aborts us
+            self.fail_at = None
+            abort.wait()
+            raise HopError("grow thread aborted by watchdog")
+        eng = self.engine
+        ligo = self.ligo
+        plan = plan_for(eng.cfg, self.cfg2, eng.params)
+        if eng.mesh is not None:
+            # replicate the operator onto the mesh once, off the apply path
+            ligo = place_operator(ligo, eng.mesh)
+        grown = plan.executor(mesh=eng.mesh)(ligo, eng.params)
+        jax.block_until_ready(grown)
+        return grown
+
+    def _launch(self) -> None:
+        self.attempts += 1
+        self._gen += 1
+        gen = self._gen
+        self._buf, self._err = None, None
+        self._retry_at = None
+        self._abort = threading.Event()
+        abort = self._abort
+        self._t_launch = time.perf_counter()
+        if not self.background:
+            try:
+                buf = self._stage_grow(abort)
+                with self._lock:
+                    self._buf = buf
+            except Exception as e:                     # noqa: BLE001
+                with self._lock:
+                    self._err = e
+            return
+
+        def run():
+            try:
+                buf = self._stage_grow(abort)
+                with self._lock:
+                    if gen == self._gen:
+                        self._buf = buf
+            except Exception as e:                     # noqa: BLE001
+                with self._lock:
+                    if gen == self._gen:
+                        self._err = e
+
+        self._thread = threading.Thread(target=run, daemon=True,
+                                        name=f"hop-grow-{gen}")
+        self._thread.start()
+
+    def begin(self) -> None:
+        eng = self.engine
+        print(f"[hop] beginning live hop {eng.cfg.name} -> {self.cfg2.name} "
+              f"({'background' if self.background else 'synchronous'} grow, "
+              f"{len(eng.live)} live sessions)")
+        self._t_begin = time.perf_counter()
+        self._launch()
+
+    # -- stages 2+3, failure handling (engine thread) ------------------------
+    def _fail(self, stage: str, err: Exception) -> None:
+        eng = self.engine
+        with self._lock:
+            self._gen += 1             # orphan any in-flight grow thread
+            self._buf, self._err = None, None
+        self._abort.set()
+        print(f"[hop] hop FAILED at stage={stage}: {err}; rolled back — "
+              f"engine keeps serving {eng.cfg.name} "
+              f"({len(eng.live)} in-flight sessions intact, 0 dropped)")
+        if self.attempts <= self.retries:
+            delay = self.backoff * (2 ** (self.attempts - 1))
+            self._retry_at = time.perf_counter() + delay
+            print(f"[hop] retrying hop in {delay * 1e3:.0f} ms "
+                  f"(attempt {self.attempts + 1}/{self.retries + 1})")
+        else:
+            self.failed = True
+            print(f"[hop] giving up after {self.attempts} attempts; "
+                  f"engine continues on {eng.cfg.name}")
+
+    def _migrate_state(self, grown):
+        self._chaos("cache-grow")
+        eng = self.engine
+        mode = self.cache_mode
+        if mode == "auto":
+            mode = ("grow" if can_grow_cache(eng.cfg, self.cfg2)
+                    and is_lossless_operator(self.ligo, eng.cfg, self.cfg2)
+                    else "reprefill")
+        if mode == "grow":
+            state = grow_decode_state(eng.state, self.ligo, eng.cfg,
+                                      self.cfg2, mesh=eng.mesh)
+        else:
+            state = eng.reprefill_state(grown, self.cfg2)
+        jax.block_until_ready(state)
+        return state, mode
+
+    def poll(self) -> bool:
+        """Advance the hop between decode steps; True once settled
+        (completed or given up)."""
+        if self.completed or self.failed:
+            return True
+        if self._retry_at is not None:
+            if time.perf_counter() < self._retry_at:
+                return False
+            self._launch()
+        with self._lock:
+            buf, err = self._buf, self._err
+        if err is not None:
+            self._fail("grow", err)
+            return self.failed
+        if buf is None:
+            if (time.perf_counter() - self._t_launch
+                    > self.watchdog.budget()):
+                self._fail("grow", HopError(
+                    f"watchdog: grow stage exceeded "
+                    f"{self.watchdog.budget():.2f}s budget"))
+            return self.failed
+        self.watchdog.observe(time.perf_counter() - self._t_launch)
+        eng = self.engine
+        old_name = eng.cfg.name
+        live = len(eng.live)
+        try:
+            state, mode = self._migrate_state(buf)
+        except (HopError, CacheGrowthError) as e:
+            self._fail("cache-grow", e)
+            return self.failed
+        try:
+            self._chaos("swap")
+            eng.install(self.cfg2, buf, state)
+        except HopError as e:
+            self._fail("swap", e)
+            return self.failed
+        self.completed = True
+        self.cache_path = mode
+        self.swap_at_step = eng.decode_steps
+        self.hop_ms = (time.perf_counter() - self._t_begin) * 1e3
+        print(f"[hop] hop complete: {old_name} -> {self.cfg2.name} in "
+              f"{self.hop_ms:.1f} ms (cache: {mode}, {live} live sessions "
+              f"migrated, attempt {self.attempts}/{self.retries + 1})")
+        return True
