@@ -23,7 +23,7 @@ history for exactly this reason).
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -139,8 +139,15 @@ def grow_decode_state(state: Dict[str, Any], ligo: Dict, cfg1: ModelConfig,
     re-prefill. Raises :class:`CacheGrowthError` whenever the in-place rule
     does not apply — callers treat that as "re-prefill this session".
 
+    Paged states (a ``"pages"`` entry; ``serving.kv_pages``) grow
+    *per-block*: the expander applies position-wise, so the block pool
+    ``(L, n_blocks, bs, KV1, dh1)`` grows exactly like a dense row and the
+    page table / allocator ride through untouched (block geometry is
+    independent of the grown feature dims).
+
     With ``mesh``, the grown caches land carrying the ``state_pspecs``
-    shardings for the *big* config, ready for the grown decode step."""
+    shardings for the *big* config, ready for the grown decode step (paged
+    pools are replicated — ``state_pspecs`` describes dense rows)."""
     if not can_grow_cache(cfg1, cfg2):
         raise CacheGrowthError(
             f"family {cfg1.family!r} (window={cfg1.window}->{cfg2.window}): "
@@ -148,10 +155,127 @@ def grow_decode_state(state: Dict[str, Any], ligo: Dict, cfg1: ModelConfig,
     new_caches = grow_attn_caches(state["caches"], ligo, cfg1, cfg2,
                                   depth=depth)
     new_state = {"caches": new_caches, "pos": state["pos"]}
+    paged = "pages" in state
+    if paged:
+        new_state["pages"] = state["pages"]
     if mesh is not None:
-        from repro.distributed.sharding import named_shardings, state_pspecs
-        ps = state_pspecs(new_state, cfg2,
-                          model_size=mesh.shape.get("model", 1),
-                          dp_size=mesh.shape.get("data", 1))
-        new_state = jax.device_put(new_state, named_shardings(ps, mesh))
+        from repro.distributed.sharding import (P, named_shardings,
+                                                state_pspecs)
+        if paged:
+            from jax.sharding import NamedSharding
+            rep = NamedSharding(mesh, P())
+            new_state = jax.device_put(new_state, jax.tree.map(
+                lambda _: rep, new_state))
+        else:
+            ps = state_pspecs(new_state, cfg2,
+                              model_size=mesh.shape.get("model", 1),
+                              dp_size=mesh.shape.get("data", 1))
+            new_state = jax.device_put(new_state, named_shardings(ps, mesh))
+    return new_state
+
+
+# ---------------------------------------------------------------------------
+# Depth-replay fast path
+# ---------------------------------------------------------------------------
+def depth_replay_plan(ligo: Dict, cfg1: ModelConfig,
+                      cfg2: ModelConfig) -> Optional[int]:
+    """If the hop only *appends* layers — width untouched, every depth
+    matrix carrying the old layers unchanged at the bottom of the grown
+    stack (identity first-L1 rows; StackBERT's ``stack_pattern`` has this
+    form) — the old layers' caches are already exact for the grown model,
+    and only the new layers need K/V. Returns the preserved-prefix length
+    (``cfg1.n_layers``), or None when the plan does not apply.
+
+    Checks concrete host values — call outside jit (the hop controller
+    decides the migration path before launching compiled work).
+    """
+    if not (cfg1.family in ("dense", "moe", "vlm")
+            and cfg2.family == cfg1.family
+            and cfg1.window == 0 and cfg2.window == 0
+            and cfg2.n_layers > cfg1.n_layers
+            and cfg1.blocks[0] == cfg2.blocks[0]):
+        return None
+    if (cfg1.d_model, cfg1.n_heads, cfg1.n_kv_heads, cfg1.d_head,
+            cfg1.d_ff, cfg1.moe_d_ff) != (
+            cfg2.d_model, cfg2.n_heads, cfg2.n_kv_heads, cfg2.d_head,
+            cfg2.d_ff, cfg2.moe_d_ff):
+        return None
+    for name, E in _flatten(ligo.get("width", {})).items():
+        E = np.asarray(E)
+        if E.ndim != 2 or E.shape[0] != E.shape[1] or not np.array_equal(
+                E, np.eye(E.shape[0])):
+            return None
+    L1, L2 = cfg1.n_layers, cfg2.n_layers
+    for kind, leaves in ligo.get("depth", {}).items():
+        for leaf, w in leaves.items():
+            w = np.asarray(w)
+            if w.shape != (L2, L1) or not np.array_equal(
+                    w[:L1], np.eye(L1)):
+                return None
+    return L1
+
+
+def replay_grow_state(state: Dict[str, Any], params2, cfg1: ModelConfig,
+                      cfg2: ModelConfig, resid, *,
+                      mesh=None) -> Dict[str, Any]:
+    """Migrate a decode state across a depth-only hop by replaying *only
+    the new layers* over the preserved residual stream.
+
+    ``resid``: (slots, cap, D) — the pre-final-norm residual stream the
+    engine recorded while serving the old model (positions beyond each
+    slot's own length are garbage, exactly like cache padding: masked until
+    overwritten). Because the hop preserves the old layers verbatim at the
+    bottom of the stack, this stream *is* the input the appended layers see
+    during the grown model's own prefill — so one forward through the
+    ``L2-L1`` new layers rebuilds their caches, instead of ``L2`` layers of
+    full re-prefill per session.
+
+    Old-layer caches are reused as-is (width untouched ⇒ same (KV, dh)),
+    for both the dense rows and the paged block pools.
+    """
+    from repro.models import blocks as B
+    from repro.models.model import DTYPES
+    n_old = cfg1.n_layers
+    kind = cfg2.blocks[0]
+    apply_block = B.apply_attn if kind == "attn" else B.apply_moe_block
+    h = jnp.asarray(resid).astype(DTYPES[cfg2.dtype])
+    cap = h.shape[1]
+    positions = jnp.arange(cap)[None]
+    p_stack = params2["layers"][kind]
+    rows_k, rows_v = [], []
+    for l in range(n_old, cfg2.n_layers):
+        p_l = jax.tree.map(lambda a: a[l], p_stack)
+        h, nc, _ = apply_block(p_l, h, cfg2, positions, mode="prefill")
+        rows_k.append(nc["k"])
+        rows_v.append(nc["v"])
+    new_k = jnp.stack(rows_k)                   # (L_new, slots, cap, KV, dh)
+    new_v = jnp.stack(rows_v)
+    paged = "pages" in state
+    if paged:
+        table = state["pages"]                  # (slots, P)
+        nb, bs = state["caches"]["k"].shape[1:3]
+        tgt = jnp.where(table >= 0, table, nb)  # unmapped → dropped
+
+        def rows_to_pool(rows):
+            L_new, slots = rows.shape[:2]
+            blocks = rows.reshape(L_new, slots, cap // bs, bs,
+                                  *rows.shape[3:])
+            pool = jnp.zeros((L_new, nb, bs) + rows.shape[3:], rows.dtype)
+            return pool.at[:, tgt].set(blocks)
+
+        new_k, new_v = rows_to_pool(new_k), rows_to_pool(new_v)
+    new_caches = {
+        "k": jnp.concatenate([state["caches"]["k"],
+                              new_k.astype(state["caches"]["k"].dtype)], 0),
+        "v": jnp.concatenate([state["caches"]["v"],
+                              new_v.astype(state["caches"]["v"].dtype)], 0)}
+    new_state = {"caches": new_caches, "pos": state["pos"]}
+    if paged:
+        new_state["pages"] = state["pages"]
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+        from repro.distributed.sharding import P as PS
+        rep = NamedSharding(mesh, PS())
+        new_state = jax.device_put(new_state,
+                                   jax.tree.map(lambda _: rep, new_state))
     return new_state

@@ -56,6 +56,15 @@ def gamma_expand(Bv: jax.Array, cfg1: ModelConfig, cfg2: ModelConfig
         return Bv
     G1, G2 = H1 // KV1, H2 // KV2
     B = Bv.reshape(KV2, dh2, KV1, dh1)
+    if KV1 == KV2 and H1 == H2 and dh1 == dh2:
+        # Unchanged head layout (d_model/d_ff-only hop on a GQA model):
+        # lift per group position — query head (g, j) maps through B_v's
+        # (g → g') block to query head (g', j). Γ(I) = I, so lossless
+        # operators stay bitwise function-preserving on GQA (the dup+avg
+        # lift below rewrites wo even for the identity). Exactly the MHA
+        # behaviour when G == 1.
+        T = jnp.einsum("adbe,jk->ajdbke", B, jnp.eye(G1, dtype=B.dtype))
+        return T.reshape(H2 * dh2, H1 * dh1)
     B = jnp.repeat(B, G2, axis=0)                  # query heads of large model
     B = jnp.repeat(B, G1, axis=2) / G1             # average over small groups
     return B.reshape(H2 * dh2, H1 * dh1)

@@ -148,9 +148,12 @@ def lemon_operator(cfg1: ModelConfig, cfg2: ModelConfig) -> Dict:
       denominator),
     - equal ``d_head`` (RoPE and the 1/sqrt(d_head) scale act per-head),
     - equal ``n_layers`` (depth blends average layers; identity only),
-    - MHA on both sides, or heads unchanged: under GQA the ``wo``
-      in-expander averages query heads within a kv group (``gamma_expand``'s
-      1/G fan-in), which is not function-preserving for zero-padded heads.
+    - MHA on both sides, or heads unchanged: when heads *grow* under GQA
+      the ``wo`` in-expander averages query heads within a kv group
+      (``gamma_expand``'s 1/G fan-in), which is not function-preserving for
+      zero-padded heads. With the layout unchanged ``gamma_expand`` lifts
+      per group position (Γ(I) = I), so d_ff-only growth of a GQA model is
+      exactly as lossless as on MHA.
     """
     S.check_growable(cfg1, cfg2)
     if cfg1.d_model != cfg2.d_model:

@@ -154,21 +154,38 @@ def _serve_live(args, cfg, params, mesh):
     from repro.serving import HopController, ServingEngine
     if cfg.modality != "text":
         raise SystemExit(f"--live-grow-at: {cfg.name} is not a token model")
-    chain = [cfg] + _target_chain(cfg, args.grow_to or "2x",
-                                  smoke=args.smoke)
-    ops = [init_ligo_params(jax.random.PRNGKey(1 + i), a, b)
-           for i, (a, b) in enumerate(zip(chain[:-1], chain[1:]))]
-    ligo = compose_chain(ops, chain)
-    cfg2 = chain[-1]
+    if args.hop_operator == "lemon":
+        # Lossless hop: double d_ff at fixed d_model/d_head/heads — the one
+        # expansion LEMON zero-padding supports unconditionally (GQA
+        # included). The grown model is bitwise the same function, so the
+        # cache grows in place and a resident drafter's proposals are
+        # accepted wholesale (the spec-decode-through-hop smoke relies on
+        # this). --grow-to is ignored on this path.
+        from repro.core.operators import lemon_operator
+        cfg2 = cfg.scaled(name=f"{cfg.name}-ff2", d_ff=cfg.d_ff * 2)
+        ligo = lemon_operator(cfg, cfg2)
+    else:
+        chain = [cfg] + _target_chain(cfg, args.grow_to or "2x",
+                                      smoke=args.smoke)
+        ops = [init_ligo_params(jax.random.PRNGKey(1 + i), a, b)
+               for i, (a, b) in enumerate(zip(chain[:-1], chain[1:]))]
+        ligo = compose_chain(ops, chain)
+        cfg2 = chain[-1]
 
     engine = ServingEngine(params, cfg, slots=args.batch,
                            prompt_budget=args.prompt_len,
                            gen_budget=args.gen,
-                           queue_capacity=args.queue_cap, mesh=mesh)
+                           queue_capacity=args.queue_cap, mesh=mesh,
+                           kv_layout=args.kv_layout,
+                           block_size=args.block_size,
+                           pool_blocks=args.kv_pool_blocks,
+                           temperature=args.temperature, top_p=args.top_p,
+                           seed=args.seed, spec_k=args.speculative)
     hop = HopController(engine, cfg2, ligo, cache_mode=args.cache_mode,
                         fail_at=args.fail_at_hop, retries=args.hop_retries,
                         timeout=args.hop_timeout,
                         background=not args.hop_sync)
+    hop.warm()                     # pre-compile the grow + seed the watchdog
     n_req = args.requests or args.batch * 2
     rng = np.random.RandomState(0)
     prompts = np.asarray(gen_tokens(0, 0, n_req, args.prompt_len,
@@ -209,6 +226,28 @@ def _serve_live(args, cfg, params, mesh):
     print(f"[serve] {total} tokens in {wall:.2f} s | "
           f"{total / max(wall, 1e-9):.1f} tok/s | decode p50 "
           f"{p50:.1f} ms p99 {p99:.1f} ms (through the hop)")
+    if args.speculative > 0:
+        st = engine.spec_stats
+        if st.get("rounds"):
+            print(f"[spec] acceptance {st['accepted']}/{st['drafted']} "
+                  f"drafted ({st['accepted'] / max(1, st['drafted']):.0%}, "
+                  f"first round {st.get('first_round_acc', 0.0):.0%}) | "
+                  f"K={engine.spec_k} drafter={st.get('drafter')} | est "
+                  f"speedup {st.get('est_speedup', 0.0):.2f}x"
+                  + (f" | disabled: {st['disabled']}" if st.get("disabled")
+                     else ""))
+        else:
+            print("[spec] acceptance n/a (no speculative rounds ran — "
+                  "drafter never adopted or queue drained pre-hop)")
+    if engine.alloc is not None:
+        a = engine.alloc
+        pool = engine.state["caches"]["k"]   # (L, n_blocks, bs, KV, dh)
+        elt = jnp.dtype(pool.dtype).itemsize
+        block_bytes = 2 * pool.shape[0] * int(np.prod(pool.shape[2:])) * elt
+        dense_bytes = block_bytes // a.block_size * engine.cap
+        print(f"[paged] peak {a.peak_blocks} blocks | "
+              f"{a.bytes_per_slot(block_bytes) / 1024:.1f} KiB/slot vs "
+              f"{dense_bytes / 1024:.1f} KiB/slot dense")
 
 
 def main():
@@ -220,7 +259,34 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--mesh", default="host",
                     choices=["host", "single", "multi"])
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="live-path sampling temperature (0 = greedy; "
+                         "sampling runs a fixed per-slot Philox chain keyed "
+                         "by --seed, so runs are reproducible)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (with --temperature > 0)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling PRNG seed (live path)")
+    ap.add_argument("--speculative", type=int, default=0, metavar="K",
+                    help="after the live hop, keep the pre-hop model "
+                         "resident as a drafter: draft K tokens/slot per "
+                         "round with the small model, verify all K in one "
+                         "batched launch of the grown one (greedy output is "
+                         "bit-equal to vanilla greedy; auto-disables when "
+                         "the measured speedup estimate drops below 1)")
+    ap.add_argument("--kv-layout", default="paged",
+                    choices=["paged", "dense"],
+                    help="live-path KV cache layout: paged = fixed-size "
+                         "blocks + per-slot page tables over a shared pool "
+                         "(mixed-length slots stop paying max_len); dense = "
+                         "one max_len row per slot (the oracle)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV block size (tokens per block)")
+    ap.add_argument("--kv-pool-blocks", type=int, default=None,
+                    help="paged KV pool size in blocks (default: every slot "
+                         "can reach max_len). Smaller pools create real "
+                         "admission pressure: requests defer at the door "
+                         "(never drop) until their worst case fits")
     ap.add_argument("--ckpt", default=None, metavar="DIR",
                     help="serve the newest checkpoint in DIR (restored "
                          "sharded via params_pspecs) instead of init_params")
@@ -242,10 +308,22 @@ def main():
                     help="run the grow stage synchronously instead of "
                          "overlapped with decoding (deterministic timing)")
     ap.add_argument("--cache-mode", default="auto",
-                    choices=["auto", "grow", "reprefill"],
+                    choices=["auto", "grow", "replay", "reprefill"],
                     help="live-hop KV-cache migration: auto = in-place "
                          "growth iff the operator is provably lossless, "
-                         "else re-prefill each session's history")
+                         "else new-layer replay from the preserved residual "
+                         "stream for a depth-append hop, else re-prefill "
+                         "each session's history")
+    ap.add_argument("--hop-operator", default="ligo",
+                    choices=["ligo", "lemon"],
+                    help="live-hop growth operator: ligo = randomly-"
+                         "initialised LiGO to the --grow-to target (the "
+                         "production shape; acceptance through the hop is "
+                         "whatever the operator earns); lemon = lossless "
+                         "zero-pad d_ff doubling of the serving arch "
+                         "(--grow-to ignored) — the grown model is bitwise "
+                         "identical, so the cache grows in place and a "
+                         "resident drafter hits 100%% acceptance")
     ap.add_argument("--requests", type=int, default=None,
                     help="number of requests to serve on the live path "
                          "(default 2x slots)")

@@ -218,6 +218,26 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return o.reshape(B, 1, H, dh).astype(q.dtype)
 
 
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, pages: jax.Array,
+                           cur_len: jax.Array) -> jax.Array:
+    """Single-step attention over a *paged* KV cache.
+
+    q: (B, 1, H, dh); k_pool/v_pool: (n_blocks, block_size, KV, dh) — the
+    shared block pool; pages: (B, P) int32 page table (-1 = unmapped;
+    negative indices wrap on gather, which is safe because every position
+    ``>= cur_len`` is masked and unmapped pages only cover those). The
+    gather materialises each slot's (P*block_size) view, then the math is
+    exactly :func:`decode_attention` (full-context only — windowed caches
+    stay on the dense ring-buffer layout).
+    """
+    B, P = pages.shape
+    bs = k_pool.shape[1]
+    k = k_pool[pages].reshape(B, P * bs, *k_pool.shape[2:])
+    v = v_pool[pages].reshape(B, P * bs, *v_pool.shape[2:])
+    return decode_attention(q, k, v, cur_len)
+
+
 # ---------------------------------------------------------------------------
 # MLP
 # ---------------------------------------------------------------------------

@@ -129,7 +129,8 @@ def _maybe_remat(fn, remat: bool):
 
 
 def _fwd_homogeneous(params, x, cfg, positions, *, mode, caches, cur_len,
-                     remat, chunk_q, chunk_k, act_spec=None, p_bf16=False):
+                     remat, chunk_q, chunk_k, act_spec=None, p_bf16=False,
+                     pages=None):
     kind = cfg.blocks[0]
 
     def body(carry, inp):
@@ -138,7 +139,8 @@ def _fwd_homogeneous(params, x, cfg, positions, *, mode, caches, cur_len,
         if kind in _APPLY:
             h, nc, a = _APPLY[kind](p, h, cfg, positions, cache=c, mode=mode,
                                     cur_len=cur_len, chunk_q=chunk_q,
-                                    chunk_k=chunk_k, p_bf16=p_bf16)
+                                    chunk_k=chunk_k, p_bf16=p_bf16,
+                                    pages=pages)
         else:
             h, nc, a = _SEQ_APPLY[kind](p, h, cfg, mode=mode, cache=c)
         if act_spec is not None:
@@ -219,8 +221,17 @@ def _fwd_zamba(params, x, cfg, positions, *, mode, caches, cur_len, remat,
 def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
             mode: str = "train", caches=None, cur_len=None,
             remat: bool = False, chunk_q: int = 2048, chunk_k: int = 2048,
-            act_spec=None, p_bf16: bool = False):
-    """Returns (hidden (B,T,D), new_caches, aux_loss).
+            act_spec=None, p_bf16: bool = False, pages=None,
+            return_prenorm: bool = False):
+    """Returns (hidden (B,T,D), new_caches, aux_loss) — plus the
+    pre-final-norm residual stream as a 4th element when
+    ``return_prenorm=True`` (the serving engine preserves it so a
+    depth-only hop can replay just the *new* layers instead of
+    re-prefilling; see ``core.grow_cache.replay_grow_state``).
+
+    ``pages``: (B, P) page table switching attention caches to the paged
+    block-pool layout (decode mode, attention-cache families only; see
+    ``serving.kv_pages``).
 
     ``act_spec``: optional PartitionSpec pinned onto the residual stream
     between blocks (e.g. P("data", "model", None) = Megatron-style sequence
@@ -236,10 +247,12 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
 
     fam = cfg.family
     if fam == "ssm" and "mlstm" in params["layers"]:
+        assert pages is None, "paged KV: attention-cache families only"
         x, new_caches, aux = _fwd_xlstm(params, x, cfg, mode=mode,
                                         caches=caches, remat=remat,
                                         act_spec=act_spec)
     elif fam == "hybrid":
+        assert pages is None, "paged KV: attention-cache families only"
         x, new_caches, aux = _fwd_zamba(params, x, cfg, positions, mode=mode,
                                         caches=caches, cur_len=cur_len,
                                         remat=remat, chunk_q=chunk_q,
@@ -248,8 +261,11 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
         x, new_caches, aux = _fwd_homogeneous(
             params, x, cfg, positions, mode=mode, caches=caches,
             cur_len=cur_len, remat=remat, chunk_q=chunk_q, chunk_k=chunk_k,
-            act_spec=act_spec, p_bf16=p_bf16)
+            act_spec=act_spec, p_bf16=p_bf16, pages=pages)
+    prenorm = x
     x = apply_norm(params["final_norm"], x, cfg.norm)
+    if return_prenorm:
+        return x, new_caches, aux, prenorm
     return x, new_caches, aux
 
 
@@ -299,13 +315,24 @@ def init_decode_state(cfg: ModelConfig, batch_size: int, seq_len: int):
 
 
 def decode_step(params, cfg: ModelConfig, state, batch: Dict[str, jax.Array],
-                ) -> Tuple[jax.Array, Any]:
-    """One-token decode: batch["tokens"]: (B, 1). Returns (logits (B,V), state)."""
+                *, return_prenorm: bool = False) -> Tuple[jax.Array, Any]:
+    """One-token decode: batch["tokens"]: (B, 1). Returns (logits (B,V), state).
+
+    A ``state["pages"]`` entry switches attention caches to the paged
+    layout; the table rides through unchanged (the host owns it). With
+    ``return_prenorm`` the result is (logits, state, prenorm (B,1,D))."""
     cur_len = state["pos"] + 1
-    hidden, new_caches, _ = forward(params, cfg, batch, mode="decode",
-                                    caches=state["caches"], cur_len=cur_len)
+    out = forward(params, cfg, batch, mode="decode", caches=state["caches"],
+                  cur_len=cur_len, pages=state.get("pages"),
+                  return_prenorm=return_prenorm)
+    hidden, new_caches = out[0], out[1]
     logits = unembed(params, cfg, hidden[:, -1])
-    return logits, {"caches": new_caches, "pos": cur_len}
+    new_state = {"caches": new_caches, "pos": cur_len}
+    if "pages" in state:
+        new_state["pages"] = state["pages"]
+    if return_prenorm:
+        return logits, new_state, out[3]
+    return logits, new_state
 
 
 def _pad_attn_caches(caches, cfg, S_target: int):

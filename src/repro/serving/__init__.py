@@ -3,14 +3,23 @@
 ``ServingEngine`` batches sessions at independent sequence positions into
 one decode program; ``HopController`` grows the model mid-serve — params
 double-buffered through the GrowthPlan executor, live KV caches migrated by
-``core.grow_cache`` (lossless in-place growth or re-prefill), buffers
-swapped atomically between decode steps, with chaos hooks / rollback /
-bounded retry / watchdog around the whole hop.
+``core.grow_cache`` (lossless in-place growth, depth-only new-layer replay,
+or re-prefill), buffers swapped atomically between decode steps, with chaos
+hooks / rollback / bounded retry / watchdog around the whole hop.
+
+The serving fast path rides the same machinery: the KV cache defaults to a
+*paged* block-pool layout (``kv_pages`` — per-slot page tables over a
+shared free list, so mixed-length slots stop paying ``max_len``), and after
+a hop the pre-hop model stays resident as a speculative-decoding drafter
+(``speculative`` — draft K tokens with the small model, verify all K in one
+batched launch of the grown one, bit-equal to vanilla greedy decode).
 """
 from repro.serving.admission import AdmissionQueue, Request
 from repro.serving.engine import ServingEngine, make_serving_fns
 from repro.serving.hotswap import (HopController, HopError, HopWatchdog,
                                    STAGES)
+from repro.serving.kv_pages import PageAllocator, PageOOM, paged_supported
 
 __all__ = ["AdmissionQueue", "Request", "ServingEngine", "make_serving_fns",
-           "HopController", "HopError", "HopWatchdog", "STAGES"]
+           "HopController", "HopError", "HopWatchdog", "STAGES",
+           "PageAllocator", "PageOOM", "paged_supported"]

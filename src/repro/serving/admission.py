@@ -33,6 +33,11 @@ class Request:
     t_submit: float = 0.0
     t_first: Optional[float] = None
     t_done: Optional[float] = None
+    n_draws: int = 0                # sampling PRNG chain position
+    sample_key: int = 0             # engine-local PRNG identity (not uid:
+    #   uid is process-global, so it breaks same-seed reproducibility when
+    #   several engines run in one process)
+    acc_ema: Optional[float] = None  # speculative acceptance EMA (this slot)
 
     @property
     def text_tokens(self) -> List[int]:
@@ -61,6 +66,13 @@ class AdmissionQueue:
     def pop(self) -> Optional[Request]:
         with self._lock:
             return self._q.popleft() if self._q else None
+
+    def peek(self) -> Optional[Request]:
+        """Head of the queue without removing it — the paged engine defers
+        admission (rather than drop) when the pool can't back the request's
+        worst case yet."""
+        with self._lock:
+            return self._q[0] if self._q else None
 
     def __len__(self) -> int:
         with self._lock:

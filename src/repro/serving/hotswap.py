@@ -31,8 +31,10 @@ import jax
 
 from repro.configs.base import ModelConfig
 from repro.core.grow_cache import (CacheGrowthError, can_grow_cache,
-                                   grow_decode_state, is_lossless_operator)
+                                   depth_replay_plan, grow_decode_state,
+                                   is_lossless_operator, replay_grow_state)
 from repro.core.plan import place_operator, plan_for
+from repro.serving.kv_pages import paged_supported
 
 STAGES = ("grow", "cache-grow", "swap")
 
@@ -45,20 +47,38 @@ class HopError(RuntimeError):
 class HopWatchdog:
     """Deadline for the grow stage, tightened by what hops actually cost
     (the ``StragglerWatchdog`` idiom: an EWMA of observed durations sets the
-    abort threshold, bounded by a hard ``timeout``)."""
+    abort threshold, bounded by a hard ``timeout``).
+
+    ``seed`` primes the EWMA *before the first hop* — from the background
+    grow wall time measured at engine start (``HopController.warm``) or a
+    config floor — and raises ``floor`` to that measurement. Previously the
+    EWMA was seeded by the first grow itself, so a cold watchdog judged a
+    slow first hop (which pays all the compiles) against the bare
+    ``timeout``; the seeded floor now survives even a ``timeout`` set
+    tighter than a real first grow costs.
+    """
     timeout: float = 120.0
     mult: float = 5.0
     alpha: float = 0.5
     ewma: Optional[float] = None
+    floor: float = 0.0
 
     def budget(self) -> float:
         if self.ewma is None:
-            return self.timeout
-        return min(self.timeout, max(0.05, self.mult * self.ewma))
+            return max(self.floor, self.timeout)
+        return max(self.floor,
+                   min(self.timeout, max(0.05, self.mult * self.ewma)))
 
     def observe(self, dt: float) -> None:
         self.ewma = dt if self.ewma is None else (
             self.alpha * dt + (1 - self.alpha) * self.ewma)
+
+    def seed(self, dt: float) -> None:
+        """Prime a cold watchdog with a measured (or configured) first-hop
+        cost. No-op once real observations exist."""
+        self.floor = max(self.floor, dt)
+        if self.ewma is None:
+            self.ewma = dt
 
 
 class HopController:
@@ -68,14 +88,22 @@ class HopController:
     between decode steps, which advances the stage machine and performs
     cache migration + swap synchronously once the grown buffer is ready.
     ``cache_mode``: "auto" grows the cache in place iff the operator is
-    provably lossless, else re-prefills; "grow"/"reprefill" force a path.
+    provably lossless, replays only the new layers for a depth-only hop
+    (when the engine kept the residual stream), else re-prefills;
+    "grow"/"replay"/"reprefill" force a path.
+
+    After a successful swap the pre-hop model is handed to the engine as a
+    speculative-decoding drafter (``engine.adopt_drafter``) — its live
+    decode state rides along, so drafting starts on the very next round.
     """
 
     def __init__(self, engine, cfg2: ModelConfig, ligo, *,
                  cache_mode: str = "auto", fail_at: Optional[str] = None,
                  retries: int = 2, backoff: float = 0.05,
-                 timeout: float = 120.0, background: bool = True):
-        assert cache_mode in ("auto", "grow", "reprefill"), cache_mode
+                 timeout: float = 120.0, background: bool = True,
+                 watchdog_floor: float = 0.0):
+        assert cache_mode in ("auto", "grow", "replay", "reprefill"), \
+            cache_mode
         assert fail_at in (None, "hang") + STAGES, fail_at
         self.engine = engine
         self.cfg2 = cfg2
@@ -85,7 +113,7 @@ class HopController:
         self.retries = retries
         self.backoff = backoff
         self.background = background
-        self.watchdog = HopWatchdog(timeout=timeout)
+        self.watchdog = HopWatchdog(timeout=timeout, floor=watchdog_floor)
         self.attempts = 0
         self.completed = False
         self.failed = False
@@ -109,12 +137,7 @@ class HopController:
             raise HopError(f"injected failure at hop stage {stage!r}")
 
     # -- stage 1: grow (double-buffered, optionally backgrounded) -----------
-    def _stage_grow(self, abort: threading.Event):
-        self._chaos("grow")
-        if self.fail_at == "hang":     # wedge until the watchdog aborts us
-            self.fail_at = None
-            abort.wait()
-            raise HopError("grow thread aborted by watchdog")
+    def _grow_once(self):
         eng = self.engine
         ligo = self.ligo
         plan = plan_for(eng.cfg, self.cfg2, eng.params)
@@ -124,6 +147,30 @@ class HopController:
         grown = plan.executor(mesh=eng.mesh)(ligo, eng.params)
         jax.block_until_ready(grown)
         return grown
+
+    def _stage_grow(self, abort: threading.Event):
+        self._chaos("grow")
+        if self.fail_at == "hang":     # wedge until the watchdog aborts us
+            self.fail_at = None
+            abort.wait()
+            raise HopError("grow thread aborted by watchdog")
+        return self._grow_once()
+
+    def warm(self) -> float:
+        """Run one synchronous grow at engine start — off the hop path,
+        chaos-free, result discarded — and seed the watchdog with its wall
+        time. This both pre-compiles the grow (the plan executor is
+        memoised, so the real hop pays a dispatch) and fixes the cold-start
+        bug: the first *live* hop is judged against a measured budget
+        instead of a bare timeout it might legitimately exceed."""
+        t0 = time.perf_counter()
+        buf = self._grow_once()
+        dt = time.perf_counter() - t0
+        del buf
+        self.watchdog.seed(dt)
+        print(f"[hop] warmed grow path in {dt * 1e3:.1f} ms "
+              f"(watchdog seeded: budget {self.watchdog.budget():.2f}s)")
+        return dt
 
     def _launch(self) -> None:
         self.attempts += 1
@@ -190,14 +237,34 @@ class HopController:
     def _migrate_state(self, grown):
         self._chaos("cache-grow")
         eng = self.engine
+        if eng.kv_layout == "paged" and not paged_supported(self.cfg2):
+            raise CacheGrowthError(
+                f"{self.cfg2.name}: paged KV unsupported by the target "
+                "architecture; serve with kv_layout='dense' to hop there")
         mode = self.cache_mode
         if mode == "auto":
-            mode = ("grow" if can_grow_cache(eng.cfg, self.cfg2)
-                    and is_lossless_operator(self.ligo, eng.cfg, self.cfg2)
-                    else "reprefill")
+            if (can_grow_cache(eng.cfg, self.cfg2)
+                    and is_lossless_operator(self.ligo, eng.cfg, self.cfg2)):
+                mode = "grow"
+            elif (depth_replay_plan(self.ligo, eng.cfg, self.cfg2)
+                    is not None and eng.replay_ready()):
+                mode = "replay"
+            else:
+                mode = "reprefill"
         if mode == "grow":
             state = grow_decode_state(eng.state, self.ligo, eng.cfg,
                                       self.cfg2, mesh=eng.mesh)
+        elif mode == "replay":
+            if depth_replay_plan(self.ligo, eng.cfg, self.cfg2) is None:
+                raise CacheGrowthError(
+                    "cache_mode='replay': the operator is not a "
+                    "depth-append (identity width + identity-prefix depth)")
+            if not eng.replay_ready():
+                raise CacheGrowthError(
+                    "cache_mode='replay': the engine has no complete "
+                    "residual stream for the live slots")
+            state = replay_grow_state(eng.state, grown, eng.cfg, self.cfg2,
+                                      eng.resid, mesh=eng.mesh)
         else:
             state = eng.reprefill_state(grown, self.cfg2)
         jax.block_until_ready(state)
@@ -208,6 +275,8 @@ class HopController:
         (completed or given up)."""
         if self.completed or self.failed:
             return True
+        if self._t_launch is None:     # begin() not called yet
+            return False
         if self._retry_at is not None:
             if time.perf_counter() < self._retry_at:
                 return False
@@ -233,12 +302,17 @@ class HopController:
         except (HopError, CacheGrowthError) as e:
             self._fail("cache-grow", e)
             return self.failed
+        old = (eng.cfg, eng.params, eng.state)
         try:
             self._chaos("swap")
             eng.install(self.cfg2, buf, state)
         except HopError as e:
             self._fail("swap", e)
             return self.failed
+        # the pre-hop model (with its live decode state) becomes the
+        # speculative drafter — LiGO's premise in serving form: the small
+        # model already approximates the grown one, for free
+        drafting = eng.adopt_drafter(*old)
         self.completed = True
         self.cache_path = mode
         self.swap_at_step = eng.decode_steps
@@ -246,4 +320,8 @@ class HopController:
         print(f"[hop] hop complete: {old_name} -> {self.cfg2.name} in "
               f"{self.hop_ms:.1f} ms (cache: {mode}, {live} live sessions "
               f"migrated, attempt {self.attempts}/{self.retries + 1})")
+        if drafting:
+            print(f"[spec] drafter resident: {old_name} drafts "
+                  f"K={eng.spec_k} tokens/round for {self.cfg2.name} "
+                  f"to verify")
         return True
