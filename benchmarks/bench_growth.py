@@ -16,7 +16,9 @@ differentiates through ``apply_ligo`` on every SGD step, so the train-time
 hot loop is the backward, not the forward: wall times for ``jax.grad`` of
 the legacy and plan engines, and accounted HBM bytes for the einsum backward
 formulation vs the fused multi-cotangent Pallas backward kernel (one pass
-over the dP tiles, small-space partial reductions). Plus the *sharded*
+over the dP tiles, small-space partial reductions). Plus the cross-family
+dense→MoE ``upcycle_apply`` (renamed leaf groups, expert-axis broadcast,
+created zero router — plan vs legacy walk). Plus the *sharded*
 executor (``mesh=`` in/out shardings) on 1 vs 8 forced virtual host devices
 — the 8-way leg runs in a subprocess since XLA fixes the device count at
 init — and a ``train_ligo`` step (scan phase vs per-step jit loop). Plus the
@@ -214,7 +216,9 @@ def _est_apply_hbm(plan, small, big, ligo, *, mode: str) -> int:
         L2 = 0
         if g.stacked:
             from repro.core.ligo import _kind_counts
-            L2 = _kind_counts(c2).get(g.kind, 0)
+            # dst_kind: cross-family groups (upcycle) land in a renamed
+            # target stack ("attn" source leaves -> "moe" target kind)
+            L2 = _kind_counts(c2).get(g.dst_kind, 0)
         if g.vec:
             dims = {"l": L1, "n": g.shape[-1]}
             order = (("out", "blend") if mode == "legacy" else g.order)
@@ -287,7 +291,7 @@ def _est_grad_hbm(plan, small, big, ligo, *, mode: str) -> int:
              + 2 * _tree_bytes(ligo))
     for g in plan.groups:
         L1 = g.shape[0] if g.stacked else 1
-        L2 = _kind_counts(c2).get(g.kind, 0) if g.stacked else 0
+        L2 = _kind_counts(c2).get(g.dst_kind, 0) if g.stacked else 0
         G = len(g.paths)
         if g.vec:
             dims = {"l": L1, "n": g.shape[-1]}
@@ -423,6 +427,54 @@ def _bench_apply_pair(name: str, c1, c2, iters: int, entries: List[Dict],
         "fused_vs_legacy_est_hbm": round(hbm_legacy / hbm_fused, 3),
         "fused_bwd_vs_einsum_bwd_est_hbm":
             round(hbm_grad_einsum / hbm_grad_fused, 3),
+    }
+
+
+def _bench_upcycle(entries: List[Dict], speedups: Dict,
+                   iters: int = 15) -> None:
+    """Dense→MoE upcycle apply (cross-family hop): the GrowthPlan path —
+    renamed leaf groups, expert-axis broadcast, created zero router — vs the
+    legacy per-leaf walk, on an rms-norm proxy pair (upcycling requires a
+    bias-free source)."""
+    from repro.configs import moe_target
+    from repro.core import apply_ligo, plan_for
+    from repro.core.upcycle import upcycle_operator
+    from repro.models import init_params
+
+    c1 = PROXY_SMALL.scaled(name="proxy-rms", norm="rms")
+    c2 = moe_target(c1, n_experts=4, top_k=2)
+    sp = init_params(c1, jax.random.PRNGKey(0))
+    op = upcycle_operator(c1, c2)
+    plan = plan_for(c1, c2, sp)
+    ex = plan.executor(use_kernel=False)
+    big = ex(op, sp)
+    f_leg = jax.jit(lambda l, s: apply_ligo(l, s, c1, c2, engine="legacy"))
+    ms = _median_ms_interleaved({
+        "legacy_eager": lambda: apply_ligo(op, sp, c1, c2, engine="legacy"),
+        "legacy_jit": lambda: f_leg(op, sp),
+        "plan": lambda: ex(op, sp),
+    }, iters)
+    hbm_legacy = _est_apply_hbm(plan, sp, big, op, mode="legacy")
+    hbm_plan = _est_apply_hbm(plan, sp, big, op, mode="plan")
+    entries.extend([
+        {"name": f"upcycle_apply[proxy,{c2.n_experts}e]/legacy_eager",
+         "wall_ms": round(ms["legacy_eager"], 3),
+         "est_hbm_bytes": hbm_legacy,
+         "note": "dense->MoE per-leaf walk: widen, rename mlp/*->moe/*, "
+                 "broadcast over the expert axis, zero router"},
+        {"name": f"upcycle_apply[proxy,{c2.n_experts}e]/legacy_jit",
+         "wall_ms": round(ms["legacy_jit"], 3), "est_hbm_bytes": hbm_legacy,
+         "note": "same walk under jit (oracle engine)"},
+        {"name": f"upcycle_apply[proxy,{c2.n_experts}e]/plan",
+         "wall_ms": round(ms["plan"], 3), "est_hbm_bytes": hbm_plan,
+         "note": "cross-family GrowthPlan executor: batched groups widen in "
+                 "the dense space, broadcast lands pre-constraint so the "
+                 "expert stack shards at birth; router emitted as zeros"},
+    ])
+    speedups["upcycle_apply"] = {
+        "plan_vs_legacy": round(ms["legacy_eager"] / ms["plan"], 3),
+        "plan_vs_legacy_jit": round(ms["legacy_jit"] / ms["plan"], 3),
+        "n_experts": c2.n_experts,
     }
 
 
@@ -826,6 +878,7 @@ def engine_bench(quick: bool = False, out_path: Optional[str] = None) -> Dict:
                           BERT_SMALL.scaled(dtype="float32"),
                           BERT_BASE.scaled(dtype="float32"),
                           iters=7, entries=entries, speedups=speedups)
+    _bench_upcycle(entries, speedups, iters=8 if quick else 15)
     _bench_sharded_apply(entries, speedups, iters=8 if quick else 15)
     _bench_train_step(entries, speedups, steps=10 if quick else 30)
     _bench_compose(entries, speedups, iters=6 if quick else 12)

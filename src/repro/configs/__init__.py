@@ -84,6 +84,29 @@ def grow_target(cfg: ModelConfig, *, layers_mult: int = 2,
     )
 
 
+def moe_target(cfg: ModelConfig, *, n_experts: int = 4, top_k: int = 2,
+               ff_mult: float = 1.0) -> ModelConfig:
+    """The MoE twin of a dense config — the dense→MoE upcycling target.
+
+    Same trunk (depth, width, head layout); the dense FFN becomes an
+    ``n_experts``-way expert stack with ``moe_d_ff = d_ff * ff_mult``
+    (``ff_mult >= 1`` keeps the upcycle lossless: extra expert columns are
+    zero-padded). ``capacity_factor`` is inherited, so smoke sources (8.0)
+    get drop-free MoE twins for exactness tests."""
+    if cfg.family != "dense":
+        raise ValueError(f"moe_target needs a dense source, got "
+                         f"{cfg.family!r} ({cfg.name})")
+    return cfg.scaled(
+        name=cfg.name + "-moe",
+        family="moe",
+        block_pattern=(MOE,),
+        n_experts=n_experts,
+        experts_top_k=min(top_k, n_experts),
+        moe_d_ff=int(cfg.d_ff * ff_mult),
+        d_ff=0,
+    )
+
+
 def half_config(cfg: ModelConfig) -> ModelConfig:
     """The smaller pretrained source model for growing into ``cfg`` (the
     paper's setting: the source is roughly half depth / ~2/3 width)."""

@@ -12,11 +12,13 @@ from repro.core.plan import (GrowthPlan, compose_chain, compose_ligo,
                              place_operator, plan_for)
 from repro.core.grow_cache import (CacheGrowthError, grow_decode_state,
                                    is_lossless_operator)
-from repro.core import grow_cache, operators, spec
+from repro.core.upcycle import upcycle_operator
+from repro.core import grow_cache, operators, spec, upcycle
 
 __all__ = ["apply_ligo", "init_ligo_params", "count_ligo_params",
            "gamma_expand", "stack_pattern", "interp_pattern", "grow",
            "ligo_loss", "train_ligo", "GrowthPlan", "plan_for",
            "compose_ligo", "compose_chain", "place_operator",
-           "TRACE_COUNTS", "operators", "spec", "grow_cache",
-           "CacheGrowthError", "grow_decode_state", "is_lossless_operator"]
+           "TRACE_COUNTS", "operators", "spec", "grow_cache", "upcycle",
+           "upcycle_operator", "CacheGrowthError", "grow_decode_state",
+           "is_lossless_operator"]

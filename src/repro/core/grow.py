@@ -291,6 +291,13 @@ def grow(small_params, cfg1: ModelConfig, cfg2: ModelConfig, *,
         op = ops.net2net_operator(key, cfg1, cfg2)
     elif method == "bert2bert":
         op = ops.bert2bert_operator(key, cfg1, cfg2)
+    elif method == "lemon":
+        op = ops.lemon_operator(cfg1, cfg2)
+    elif method == "upcycle":
+        from repro.core.upcycle import upcycle_operator
+        op = upcycle_operator(cfg1, cfg2)
+    elif method == "gqa_merge":
+        op = ops.gqa_merge_operator(cfg1, cfg2)
     elif method == "ligo":
         op = init_ligo_params(key, cfg1, cfg2, depth_init=depth_init)
         if ligo_steps and data_it is not None:

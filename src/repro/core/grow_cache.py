@@ -41,9 +41,13 @@ def can_grow_cache(cfg1: ModelConfig, cfg2: ModelConfig) -> bool:
     """Static eligibility: families whose whole decode state is one stacked
     attention K/V cache. SSM conv/state and hybrid caches have no linear
     growth rule (the recurrence mixes channels nonlinearly), and a changed
-    attention window changes the cache budget — both re-prefill."""
+    attention window changes the cache budget — both re-prefill.
+
+    The families need not *match*: a dense→MoE upcycle changes only the FFN,
+    and the K/V cache never sees the FFN — each side just has to be an
+    attention-cache family."""
     return (cfg1.family in ("dense", "moe", "vlm")
-            and cfg2.family == cfg1.family
+            and cfg2.family in ("dense", "moe", "vlm")
             and cfg1.window == cfg2.window)
 
 
@@ -59,10 +63,16 @@ def is_lossless_operator(ligo: Dict, cfg1: ModelConfig,
     if (cfg1.d_model != cfg2.d_model or cfg1.d_head != cfg2.d_head
             or cfg1.n_layers != cfg2.n_layers):
         return False
-    heads_grow = (cfg1.n_heads != cfg2.n_heads
-                  or cfg1.n_kv_heads != cfg2.n_kv_heads)
-    if heads_grow and not (cfg1.n_heads == cfg1.n_kv_heads
-                           and cfg2.n_heads == cfg2.n_kv_heads):
+    # Head gate: an unchanged head layout is always eligible — since PR 7's
+    # Γ(I) = I lift, gamma_expand is exactly the identity there, so GQA
+    # models take lossless d_ff/d_model/upcycle hops bitwise (no forced
+    # re-prefill). Only when the layout *changes* does ``wo``'s grouped
+    # in-expander average query heads within a kv group (the 1/G fan-in),
+    # which breaks zero-pad exactness unless both sides are MHA.
+    layout_same = (cfg1.n_heads == cfg2.n_heads
+                   and cfg1.n_kv_heads == cfg2.n_kv_heads)
+    if not layout_same and not (cfg1.n_heads == cfg1.n_kv_heads
+                                and cfg2.n_heads == cfg2.n_kv_heads):
         return False
     for name, E in _flatten(ligo.get("width", {})).items():
         E = np.asarray(E)

@@ -150,12 +150,16 @@ def _kind_counts(cfg: ModelConfig) -> Dict[str, int]:
 # LiGO params: init
 # ---------------------------------------------------------------------------
 def _expand_init(key, d2: int, d1: int, noise: float) -> jax.Array:
-    """[I; random-row-copies] + noise — a Net2Net-flavoured starting point."""
+    """[I; random-row-copies] + noise — a Net2Net-flavoured starting point.
+
+    For shrinking spaces (d2 < d1, e.g. an MHA→GQA head merge) the start
+    point is the truncated identity [I 0] — keep the first d2 features.
+    """
     k1, k2 = jax.random.split(key)
-    eye = jnp.eye(d1)
+    eye = jnp.eye(d2, d1)
     if d2 > d1:
         src = jax.random.randint(k1, (d2 - d1,), 0, d1)
-        eye = jnp.concatenate([eye, jax.nn.one_hot(src, d1)], axis=0)
+        eye = jnp.concatenate([jnp.eye(d1), jax.nn.one_hot(src, d1)], axis=0)
     return eye + noise * jax.random.normal(k2, (d2, d1))
 
 
@@ -181,8 +185,12 @@ def init_ligo_params(key, cfg1: ModelConfig, cfg2: ModelConfig, *,
     pattern = stack_pattern if depth_init == "stack" else interp_pattern
     depth: Dict[str, Any] = {}
     c1, c2 = _kind_counts(cfg1), _kind_counts(cfg2)
+    hop = S.family_hop(cfg1, cfg2)
+    kmap = hop["kind_map"] if hop else {}
     for kind in c1:
-        L1k, L2k = c1[kind], c2[kind]
+        # Depth blends are keyed by SOURCE kind; on a family-changing hop
+        # the target layer count lives under the mapped kind.
+        L1k, L2k = c1[kind], c2[kmap.get(kind, kind)]
         depth[kind] = {leaf: pattern(L2k, L1k)
                        for leaf in S.layer_spec(kind, cfg1, cfg2)}
     return {"width": width, "depth": depth}
@@ -235,6 +243,11 @@ def apply_ligo(ligo: Params, small: Params, cfg1: ModelConfig,
     width = ligo["width"]
     top = S.top_spec()
     out_layers: Params = {}
+    hop = S.family_hop(cfg1, cfg2)
+    kmap = hop["kind_map"] if hop else {}
+    renames = hop["renames"] if hop else {}
+    bcast = hop["broadcast"] if hop else {}
+    c2 = _kind_counts(cfg2)
 
     def _sq(E):
         return None if E is None else E * E
@@ -259,8 +272,20 @@ def apply_ligo(ligo: Params, small: Params, cfg1: ModelConfig,
                     blend = blend * blend
                 wide = jnp.einsum("kl,l...->k...", blend.astype(wide.dtype),
                                   wide)
-            grown[path] = wide
-        out_layers[kind] = _unflatten(grown)
+            dst = renames.get(path, path)
+            if dst in bcast:
+                # Expert replication (coefficient-1 copies): (L2, a, b) →
+                # (L2, E, a, b). 1² == 1, so the broadcast is equally the
+                # squared operator — correct for AdamW v as well as params/m.
+                E = bcast[dst]
+                wide = jnp.broadcast_to(wide[:, None],
+                                        wide.shape[:1] + (E,) + wide.shape[1:])
+            grown[dst] = wide
+        tgt_kind = kmap.get(kind, kind)
+        for cpath, (shape, dt) in (hop or {}).get("created", {}).get(
+                tgt_kind, {}).items():
+            grown[cpath] = jnp.zeros((c2[tgt_kind],) + tuple(shape), dtype=dt)
+        out_layers[tgt_kind] = _unflatten(grown)
 
     out: Params = {"layers": out_layers}
     flat_top = _flatten({k: v for k, v in small.items() if k != "layers"})

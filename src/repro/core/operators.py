@@ -32,7 +32,11 @@ def _depth(cfg1, cfg2, pattern) -> Dict:
         counts1[k] = counts1.get(k, 0) + 1
     for k in cfg2.blocks:
         counts2[k] = counts2.get(k, 0) + 1
-    return {kind: {leaf: pattern(counts2[kind], counts1[kind])
+    # Depth blends are keyed by SOURCE kind + source leaves; on a
+    # family-changing hop the target layer count lives under the mapped kind.
+    hop = S.family_hop(cfg1, cfg2)
+    kmap = hop["kind_map"] if hop else {}
+    return {kind: {leaf: pattern(counts2[kmap.get(kind, kind)], counts1[kind])
                    for leaf in S.layer_spec(kind, cfg1, cfg2)}
             for kind in counts1}
 
@@ -178,6 +182,49 @@ def lemon_operator(cfg1: ModelConfig, cfg2: ModelConfig) -> Dict:
     # below. The same matrix serves both roles — zero *rows* kill new
     # out-features, zero in-rows drop the (all-zero) new in-features.
     width = {n: jnp.eye(d2s[n], d1s[n]) for n in d2s}
+    identity = lambda L2, L1: jnp.eye(L1)  # noqa: E731 (equal layer counts)
+    return {"width": width, "depth": _depth(cfg1, cfg2, identity)}
+
+
+def gqa_merge_operator(cfg1: ModelConfig, cfg2: ModelConfig) -> Dict:
+    """MHA→GQA head merging: each kv group's K/V heads become their mean.
+
+    The k/v width expander is ``kron(M, I_dhead)`` where ``M`` is the
+    (KV2, H1) group-mean matrix — row g averages the G = H1/KV2 source heads
+    of group g. ``wo``'s in-expander then resolves through ``gamma_expand``
+    (G1 = 1, so Γ block-repeats the kv rows over each group's query heads
+    with no extra scaling) — the same grouped-gamma lift whose Σcᵢ²
+    second-moment form ``grow_adamw_state_chain`` reasons about, so AdamW
+    state rides through :func:`repro.optim.grow_adamw_state` unchanged.
+
+    Head merging is a *compression* (GQA, Ainslie et al. 2023), not a
+    lossless expansion: queries keep their heads, keys/values are averaged
+    per group. Everything outside the kv space is the identity, so the
+    structural constraints mirror ``lemon_operator``'s.
+    """
+    S.check_growable(cfg1, cfg2)
+    if cfg1.n_kv_heads != cfg1.n_heads:
+        raise ValueError("gqa_merge_operator: source must be MHA "
+                         f"(n_kv_heads {cfg1.n_kv_heads} != n_heads "
+                         f"{cfg1.n_heads})")
+    if cfg2.n_kv_heads >= cfg1.n_kv_heads:
+        raise ValueError("gqa_merge_operator: target must merge kv heads "
+                         f"({cfg1.n_kv_heads} -> {cfg2.n_kv_heads})")
+    for field in ("d_model", "d_head", "n_heads", "n_layers", "d_ff"):
+        v1, v2 = getattr(cfg1, field), getattr(cfg2, field)
+        if v1 != v2:
+            raise ValueError(f"gqa_merge_operator: {field} must match "
+                             f"({v1} vs {v2}) — only kv heads merge")
+    if cfg1.n_heads % cfg2.n_kv_heads:
+        raise ValueError(f"gqa_merge_operator: n_heads {cfg1.n_heads} not "
+                         f"divisible by target kv heads {cfg2.n_kv_heads}")
+    KV2, H1, dh = cfg2.n_kv_heads, cfg1.n_heads, cfg1.d_head
+    G = H1 // KV2
+    M = np.repeat(np.eye(KV2), G, axis=1) / G            # (KV2, H1) group mean
+    kv = jnp.asarray(np.kron(M, np.eye(dh)))             # (KV2·dh, H1·dh)
+    d1s, d2s = S.width_dims(cfg1), S.width_dims(cfg2)
+    width = {n: (kv if n in ("k", "v") else jnp.eye(d2s[n], d1s[n]))
+             for n in d2s}
     identity = lambda L2, L1: jnp.eye(L1)  # noqa: E731 (equal layer counts)
     return {"width": width, "depth": _depth(cfg1, cfg2, identity)}
 

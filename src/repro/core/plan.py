@@ -83,6 +83,7 @@ correctness oracle every plan output is tested against.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from collections import Counter
 from dataclasses import dataclass
@@ -146,6 +147,19 @@ class LeafGroup:
     vec: bool                      # per-layer vector leaf (out-expander only)
     order: Tuple[str, ...]         # op sequence drawn from {in, out, blend}
     kernel_ok: bool                # fused Pallas custom_vjp path eligible
+    # Family-changing hops (dense→MoE upcycling): where the grown leaves
+    # land. Defaults mean "same kind / same paths" (every same-family plan).
+    out_kind: str = ""             # target stack kind when it differs
+    out_paths: Tuple[str, ...] = ()  # target leaf paths when renamed
+    bcast: int = 0                 # expert-replication count (0 = none)
+
+    @property
+    def dst_kind(self) -> str:
+        return self.out_kind or self.kind
+
+    @property
+    def dst_paths(self) -> Tuple[str, ...]:
+        return self.out_paths or self.paths
 
 
 def _best_order(ops_present, L1: int, L2: int, extra: int, a: int, b: int,
@@ -222,10 +236,16 @@ class GrowthPlan:
 
     def __init__(self, cfg1: ModelConfig, cfg2: ModelConfig,
                  groups: Tuple[LeafGroup, ...],
-                 exprs: Dict[ExprRef, Any]):
+                 exprs: Dict[ExprRef, Any],
+                 created: Optional[Dict[str, Dict[str, Tuple]]] = None):
         self.cfg1, self.cfg2 = cfg1, cfg2
         self.groups = groups
         self.exprs = exprs
+        # Target-only leaves with no source (family hops): kind → {path:
+        # (full stacked shape, dtype)}, materialised as zeros by ``apply``
+        # (zeros are the function-preserving router init AND the right
+        # created value for both AdamW moment maps).
+        self.created = created or {}
         self._executors: Dict[Any, Any] = {}
         self._spec_cache: Dict[Tuple[int, int], Any] = {}
 
@@ -335,7 +355,9 @@ class GrowthPlan:
         flat_top = _flatten({k: v for k, v in small.items() if k != "layers"})
 
         grown_stacks: Dict[str, Dict[str, jax.Array]] = {
-            kind: {} for kind in flat_stacks}
+            g.dst_kind: {} for g in self.groups if g.dst_kind}
+        for kind in self.created:
+            grown_stacks.setdefault(kind, {})
         grown_top: Dict[str, jax.Array] = {}
 
         for gidx, g in enumerate(self.groups):
@@ -353,11 +375,22 @@ class GrowthPlan:
                 out = self._run_group_fused(g, X, E_in, E_out, w_g, mesh=mesh)
             else:
                 out = self._run_group(g, X, E_in, E_out, w_g)
+            if g.bcast:
+                # Expert replication: (G, L2, a, b) → (G, L2, E, a, b).
+                # Coefficient-1 copies square to themselves, so the same
+                # broadcast serves params, m, and the squared v map.
+                out = jnp.broadcast_to(
+                    out[:, :, None],
+                    out.shape[:2] + (g.bcast,) + out.shape[2:])
             if group_sh is not None:
                 out = jax.lax.with_sharding_constraint(out, group_sh[gidx])
-            dst = grown_stacks[g.kind] if g.kind else grown_top
-            for gi, p in enumerate(g.paths):
+            dst = grown_stacks[g.dst_kind] if g.kind else grown_top
+            for gi, p in enumerate(g.dst_paths):
                 dst[p] = out[gi]
+
+        for kind, leaves_c in self.created.items():
+            for path, (shape, dt) in leaves_c.items():
+                grown_stacks[kind][path] = jnp.zeros(shape, dtype=dt)
 
         out_tree: Dict[str, Any] = {"layers": {
             kind: _unflatten(grown) for kind, grown in grown_stacks.items()}}
@@ -409,6 +442,8 @@ class GrowthPlan:
         i = d2(g.in_ref, g.shape[-2])
         j = d2(g.out_ref, g.shape[-1])
         mid = g.shape[(1 if g.stacked else 0):-2]
+        if g.stacked and g.bcast:
+            return (L2, g.bcast) + mid + (i, j)   # expert-replicated stack
         return ((L2,) + mid + (i, j)) if g.stacked else (mid + (i, j))
 
     def _abstract_trees(self):
@@ -419,12 +454,17 @@ class GrowthPlan:
         small: Dict[str, Dict[str, Any]] = {}
         big: Dict[str, Dict[str, Any]] = {}
         for g in self.groups:
-            out_shape = self._out_shape(g, c2.get(g.kind, 0))
+            out_shape = self._out_shape(g, c2.get(g.dst_kind, 0))
             for p in g.paths:
                 small.setdefault(g.kind, {})[p] = jax.ShapeDtypeStruct(
                     g.shape, jnp.float32)
-                big.setdefault(g.kind, {})[p] = jax.ShapeDtypeStruct(
+            for p in g.dst_paths:
+                big.setdefault(g.dst_kind, {})[p] = jax.ShapeDtypeStruct(
                     out_shape, jnp.float32)
+        for kind, leaves_c in self.created.items():
+            for p, (shape, dt) in leaves_c.items():
+                big.setdefault(kind, {})[p] = jax.ShapeDtypeStruct(
+                    tuple(shape), dt)
 
         def tree(flat: Dict[str, Dict[str, Any]]):
             t: Dict[str, Any] = {"layers": {
@@ -470,7 +510,7 @@ class GrowthPlan:
         flat[""] = _flatten({k: v for k, v in big_ps.items()
                              if k != "layers"})
         return [NamedSharding(mesh, physical_spec(
-            PartitionSpec(None, *flat[g.kind][g.paths[0]]), mesh))
+            PartitionSpec(None, *flat[g.dst_kind][g.dst_paths[0]]), mesh))
             for g in self.groups]
 
 
@@ -493,6 +533,10 @@ def _build_plan(cfg1: ModelConfig, cfg2: ModelConfig, sig) -> GrowthPlan:
     c2 = _kind_counts(cfg2)
     groups = []
     exprs: Dict[ExprRef, Any] = {}
+    hop = S.family_hop(cfg1, cfg2)
+    kmap = hop["kind_map"] if hop else {}
+    renames = hop["renames"] if hop else {}
+    bcast_map = hop["broadcast"] if hop else {}
 
     def register(expr, role: str) -> Optional[ExprRef]:
         if expr is None:
@@ -504,20 +548,28 @@ def _build_plan(cfg1: ModelConfig, cfg2: ModelConfig, sig) -> GrowthPlan:
     for kind, leaves in layers_sig:
         lspec = S.layer_spec(kind, cfg1, cfg2)
         stacked = kind != "shared_attn"
-        L2 = c2.get(kind, 0)
+        tgt_kind = kmap.get(kind, kind)
+        L2 = c2.get(tgt_kind, 0)
         buckets: Dict[Tuple, list] = {}
         for path, shape in leaves:
             in_e, out_e = lspec[path]
             vec = len(shape) == (2 if stacked else 1)
+            dst = renames.get(path, path)
+            bc = bcast_map.get(dst, 0)
             key = (shape, _expr_key(in_e) if not vec else None,
-                   _expr_key(out_e), vec)
-            buckets.setdefault(key, []).append((path, in_e, out_e))
-        for (shape, _ik, _ok, vec), members in sorted(buckets.items(),
-                                                      key=str):
-            paths = tuple(p for p, _, _ in members)
-            in_e, out_e = members[0][1], members[0][2]
+                   _expr_key(out_e), vec, bc)
+            buckets.setdefault(key, []).append((path, dst, in_e, out_e))
+        for (shape, _ik, _ok, vec, bc), members in sorted(buckets.items(),
+                                                          key=str):
+            paths = tuple(p for p, _, _, _ in members)
+            dsts = tuple(d for _, d, _, _ in members)
+            in_e, out_e = members[0][2], members[0][3]
             g = _plan_group(kind, stacked, paths, shape,
                             None if vec else in_e, out_e, vec, L2, cfg1, cfg2)
+            if hop is not None:
+                g = dataclasses.replace(
+                    g, out_kind=tgt_kind if tgt_kind != kind else "",
+                    out_paths=dsts if dsts != paths else (), bcast=bc)
             if not vec:
                 register(in_e, "in")
             register(out_e, "out")
@@ -541,7 +593,13 @@ def _build_plan(cfg1: ModelConfig, cfg2: ModelConfig, sig) -> GrowthPlan:
         register(out_e, "out")
         groups.append(g)
 
-    return GrowthPlan(cfg1, cfg2, tuple(groups), exprs)
+    created: Dict[str, Dict[str, Tuple]] = {}
+    if hop is not None:
+        for kind, leaves_c in hop.get("created", {}).items():
+            created[kind] = {
+                path: ((c2[kind],) + tuple(shape), dt)
+                for path, (shape, dt) in leaves_c.items()}
+    return GrowthPlan(cfg1, cfg2, tuple(groups), exprs, created)
 
 
 def plan_for(cfg1: ModelConfig, cfg2: ModelConfig, small) -> GrowthPlan:

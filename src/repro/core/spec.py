@@ -151,13 +151,104 @@ def top_spec() -> Dict[str, Spec]:
     }
 
 
+# ---------------------------------------------------------------------------
+# Cross-family hops (dense→MoE upcycling)
+# ---------------------------------------------------------------------------
+# Family pairs with a structural growth rule. Everything else cross-family
+# (attention→seqmix hybridisation, …) is future operator-zoo work and is
+# rejected at config-load time by check_growable.
+ALLOWED_FAMILY_HOPS = (("dense", "moe"),)
+
+
+def family_hop(cfg1: ModelConfig, cfg2: ModelConfig) -> Optional[Dict]:
+    """Structural map of a family-changing hop, or None for same-family.
+
+    A hop descriptor tells both growth engines (the legacy walk and the
+    compiled :class:`repro.core.plan.GrowthPlan`) how source layer stacks
+    land in the target architecture:
+
+    - ``kind_map``:  source stack kind → target stack kind
+    - ``renames``:   source leaf path → target leaf path within the stack
+    - ``broadcast``: target leaf path → expert count E; the grown leaf gains
+      a leading expert dim by coefficient-1 replication (Θ_e = Θ for every
+      expert — sparse upcycling, Komatsuzaki et al. 2023). A coefficient of
+      1 squares to itself, so the same broadcast is correct for the squared
+      (AdamW second-moment) operator.
+    - ``created``:   target kind → {leaf path: (per-layer shape, dtype)} for
+      leaves with *no* source, materialised as zeros. For the MoE router,
+      zeros are the function-preserving init: a zero router gives a uniform
+      softmax, and ``apply_moe``'s top-k renormalisation then weights every
+      selected (identical) expert 1/k — reproducing the dense MLP exactly.
+      Zeros are equally the right created value for both AdamW moments.
+    """
+    if cfg1.family == cfg2.family:
+        return None
+    if (cfg1.family, cfg2.family) == ("dense", "moe"):
+        E = cfg2.n_experts
+        return {
+            "kind_map": {"attn": "moe"},
+            "renames": {"mlp/w1": "moe/w1", "mlp/w3": "moe/w3",
+                        "mlp/w2": "moe/w2"},
+            "broadcast": {"moe/w1": E, "moe/w3": E, "moe/w2": E},
+            "created": {"moe": {"moe/router": ((cfg2.d_model, E),
+                                               "float32")}},
+        }
+    return None
+
+
 def check_growable(cfg1: ModelConfig, cfg2: ModelConfig) -> None:
-    assert cfg1.family == cfg2.family, (cfg1.family, cfg2.family)
-    assert tuple(cfg1.block_pattern) == tuple(cfg2.block_pattern)
-    assert cfg1.vocab_size == cfg2.vocab_size
-    assert cfg1.n_layers <= cfg2.n_layers
-    assert cfg1.d_model <= cfg2.d_model
-    assert cfg1.objective == cfg2.objective
-    assert cfg1.tie_embeddings == cfg2.tie_embeddings
-    if cfg1.n_experts:
-        assert cfg1.n_experts == cfg2.n_experts, "expert count is not grown"
+    """Validate that ``cfg1`` can grow into ``cfg2`` — at config-load time,
+    with an error naming the pair, instead of a bare KeyError deep inside
+    expander resolution."""
+    def fail(msg: str) -> None:
+        raise ValueError(
+            f"cannot grow {cfg1.name!r} -> {cfg2.name!r}: {msg}")
+
+    hop = family_hop(cfg1, cfg2)
+    if cfg1.family != cfg2.family and hop is None:
+        fail(f"family hop {cfg1.family!r} -> {cfg2.family!r} has no growth "
+             f"rule; supported cross-family hops: "
+             f"{[f'{a}->{b}' for a, b in ALLOWED_FAMILY_HOPS]} "
+             "(dense→MoE upcycling)")
+    kind_map = hop["kind_map"] if hop else {}
+    mapped = tuple(kind_map.get(k, k) for k in cfg1.block_pattern)
+    if mapped != tuple(cfg2.block_pattern):
+        fail(f"block patterns do not map: {tuple(cfg1.block_pattern)} -> "
+             f"{tuple(cfg2.block_pattern)}")
+    if cfg1.vocab_size != cfg2.vocab_size:
+        fail(f"vocab_size differs ({cfg1.vocab_size} vs {cfg2.vocab_size})")
+    if cfg1.n_layers > cfg2.n_layers:
+        fail(f"growth cannot shrink depth ({cfg1.n_layers} -> "
+             f"{cfg2.n_layers} layers)")
+    if cfg1.d_model > cfg2.d_model:
+        fail(f"growth cannot shrink d_model ({cfg1.d_model} -> "
+             f"{cfg2.d_model})")
+    if cfg1.objective != cfg2.objective:
+        fail(f"objective differs ({cfg1.objective!r} vs {cfg2.objective!r})")
+    if cfg1.tie_embeddings != cfg2.tie_embeddings:
+        fail("tie_embeddings differs")
+    if cfg1.n_experts and cfg1.n_experts != cfg2.n_experts:
+        fail(f"expert count is not grown ({cfg1.n_experts} vs "
+             f"{cfg2.n_experts})")
+    if hop is not None:
+        # dense→MoE upcycling structural requirements
+        if cfg1.d_ff <= 0:
+            fail("upcycling needs a dense FFN to replicate into experts "
+                 "(source d_ff == 0)")
+        if cfg2.n_experts <= 0:
+            fail("MoE target declares no experts")
+        if cfg1.act != cfg2.act:
+            fail(f"activation changes across the hop ({cfg1.act!r} -> "
+                 f"{cfg2.act!r}); experts must compute the dense MLP")
+        if cfg1.norm != cfg2.norm:
+            fail(f"norm changes across the hop ({cfg1.norm!r} -> "
+                 f"{cfg2.norm!r})")
+        if cfg1.norm == "layer":
+            fail("upcycling needs a bias-free (rms-norm) source — MoE "
+                 "experts carry no biases to receive the dense MLP's")
+    # Expander-space compatibility: every width space must exist on both
+    # sides (a d_ff=0 source growing into d_ff>0, say, used to die as a
+    # bare KeyError when init_ligo_params looked up the source "fc" dim).
+    d1s, d2s = width_dims(cfg1), width_dims(cfg2)
+    if set(d1s) != set(d2s):
+        fail(f"width expander spaces differ: {sorted(d1s)} vs {sorted(d2s)}")

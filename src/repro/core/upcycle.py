@@ -1,0 +1,80 @@
+"""Dense→MoE upcycling: grow a dense checkpoint into a sparse MoE model.
+
+Sparse upcycling (Komatsuzaki et al., ICLR 2023) warm-starts an MoE from a
+dense checkpoint: every expert is initialised as a copy of the dense FFN and
+the router starts uniform, so the upcycled model computes *exactly* the dense
+model's function at init and sparsifies as the router differentiates during
+continued training.
+
+Here that recipe is expressed as an ordinary LiGO operator tree over the
+cross-family hop machinery (:func:`repro.core.spec.family_hop`), so the whole
+existing stack — the compiled :class:`repro.core.plan.GrowthPlan` with its
+sharded pjit executor, AdamW moment growth (:func:`repro.optim.
+grow_adamw_state`), operator composition, and the serving hop controller —
+applies it with zero special cases:
+
+- **widths** are LEMON-style zero-pads ``[I; 0]``: identity everywhere, and
+  for the ``fc`` space ``eye(moe_d_ff, d_ff)`` — new expert columns compute
+  0 and (through the gated activation) contribute 0, so padding the expert
+  FFN wider than the dense source stays lossless;
+- **depth** is the identity blend (layer counts match across the hop);
+- the **expert axis** and the **router** are structural, carried by the hop
+  descriptor: every dense FFN leaf lands replicated across all E experts
+  (coefficient-1 copies — also exactly right for both AdamW moments), and
+  the router materialises as zeros.
+
+Function preservation at init, exactly (the test asserts ≤1e-6 on logits):
+a zero router gives a uniform softmax over experts; ``apply_moe``
+renormalises the top-k gate weights to sum to 1, so each token receives
+``Σ_{e∈topk} (1/k) · MLP(x) = MLP(x)`` — the dense block's output — for any
+``experts_top_k``, modulo capacity drops (use a generous ``capacity_factor``
+when exactness matters, e.g. the smoke configs' 8.0).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import spec as S
+from repro.core.operators import _depth
+
+
+def upcycle_operator(cfg1: ModelConfig, cfg2: ModelConfig) -> Dict:
+    """LiGO tree for the dense→MoE upcycling hop ``cfg1 → cfg2``.
+
+    Structural constraints beyond :func:`repro.core.spec.check_growable`'s
+    family gate mirror ``lemon_operator``'s — the operator is lossless, so
+    anything that would change the computed function is an error here.
+    """
+    S.check_growable(cfg1, cfg2)
+    if (cfg1.family, cfg2.family) != ("dense", "moe"):
+        raise ValueError("upcycle_operator: needs a dense source and an MoE "
+                         f"target, got {cfg1.family!r} -> {cfg2.family!r}")
+    if cfg1.d_model != cfg2.d_model:
+        raise ValueError("upcycle_operator: d_model must match "
+                         f"({cfg1.d_model} vs {cfg2.d_model}) — residual "
+                         "widening changes norm denominators")
+    if cfg1.d_head != cfg2.d_head:
+        raise ValueError("upcycle_operator: d_head must match "
+                         f"({cfg1.d_head} vs {cfg2.d_head})")
+    if (cfg1.n_heads, cfg1.n_kv_heads) != (cfg2.n_heads, cfg2.n_kv_heads):
+        raise ValueError("upcycle_operator: head layout must match "
+                         f"(({cfg1.n_heads}, {cfg1.n_kv_heads}) vs "
+                         f"({cfg2.n_heads}, {cfg2.n_kv_heads}))")
+    if cfg1.n_layers != cfg2.n_layers:
+        raise ValueError("upcycle_operator: layer counts must match "
+                         f"({cfg1.n_layers} vs {cfg2.n_layers}); grow depth "
+                         "separately")
+    if cfg2.moe_d_ff < cfg1.d_ff:
+        raise ValueError("upcycle_operator: expert FFN narrower than the "
+                         f"dense source ({cfg2.moe_d_ff} < {cfg1.d_ff}) — "
+                         "shrinking the FFN is not function-preserving")
+    d1s, d2s = S.width_dims(cfg1), S.width_dims(cfg2)
+    # jnp.eye(d2, d1) is [I; 0]: identity on the dense features, zero rows
+    # for the padded expert columns (which therefore compute and contribute
+    # exactly 0 through the gated FFN).
+    width = {n: jnp.eye(d2s[n], d1s[n]) for n in d2s}
+    identity = lambda L2, L1: jnp.eye(L1)  # noqa: E731 (equal layer counts)
+    return {"width": width, "depth": _depth(cfg1, cfg2, identity)}

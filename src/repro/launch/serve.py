@@ -41,7 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, grow_target, smoke_config
+from repro.configs import get_config, grow_target, moe_target, smoke_config
 from repro import compat
 from repro.data import gen_tokens
 from repro.launch.mesh import make_host_mesh, make_production_mesh
@@ -62,7 +62,10 @@ def _target_chain(cfg, target: str, *, smoke: bool):
     chain, cur, cum = [], cfg, 1
     for tok in target.split(","):
         tok = tok.strip()
-        if tok.endswith("x") and tok[:-1].isdigit():
+        if tok == "moe":                 # dense→MoE upcycling target
+            cur = moe_target(cur)
+            cum = 1
+        elif tok.endswith("x") and tok[:-1].isdigit():
             n = int(tok[:-1])
             if n <= cum or n % cum or ((n // cum) & (n // cum - 1)):
                 raise SystemExit(
@@ -164,6 +167,23 @@ def _serve_live(args, cfg, params, mesh):
         from repro.core.operators import lemon_operator
         cfg2 = cfg.scaled(name=f"{cfg.name}-ff2", d_ff=cfg.d_ff * 2)
         ligo = lemon_operator(cfg, cfg2)
+    elif args.hop_operator == "upcycle":
+        # Dense→MoE upcycling as a live hop: every expert starts as a copy
+        # of the dense FFN, the router starts uniform — the upcycled model
+        # is the same function at init (lossless), so the K/V cache grows in
+        # place (attention is untouched by the hop) and a resident drafter
+        # keeps 100% acceptance. --grow-to names the MoE target (default:
+        # moe_target of the serving arch).
+        from repro.core.upcycle import upcycle_operator
+        if args.grow_to:
+            tail = _target_chain(cfg, args.grow_to, smoke=args.smoke)
+            if len(tail) != 1:
+                raise SystemExit("--hop-operator upcycle takes a single-hop "
+                                 "--grow-to target")
+            cfg2 = tail[0]
+        else:
+            cfg2 = moe_target(cfg)
+        ligo = upcycle_operator(cfg, cfg2)
     else:
         chain = [cfg] + _target_chain(cfg, args.grow_to or "2x",
                                       smoke=args.smoke)
@@ -219,6 +239,13 @@ def _serve_live(args, cfg, params, mesh):
     print(f"[serve] live-hop serve: arch={cfg.name} -> "
           f"{cfg2.name if hop.completed else cfg.name} slots={args.batch} "
           f"requests={n_req}")
+    # Report the layout actually served — the engine may have fallen back
+    # from a requested paged layout (windowed/seqmix: no paged support).
+    fb = (f" (FALLBACK from requested "
+          f"'{engine.kv_layout_requested}': paged KV unsupported for "
+          f"family={cfg.family!r}, window={cfg.window})"
+          if engine.kv_fallback else "")
+    print(f"[serve] kv layout: {engine.kv_layout}{fb}")
     print(f"[serve] {c['done']} done, {c['rejected']} rejected, "
           f"{c['dropped']} dropped | hop "
           f"{'complete' if hop.completed else 'FAILED (gave up)'} "
@@ -315,7 +342,7 @@ def main():
                          "stream for a depth-append hop, else re-prefill "
                          "each session's history")
     ap.add_argument("--hop-operator", default="ligo",
-                    choices=["ligo", "lemon"],
+                    choices=["ligo", "lemon", "upcycle"],
                     help="live-hop growth operator: ligo = randomly-"
                          "initialised LiGO to the --grow-to target (the "
                          "production shape; acceptance through the hop is "
@@ -323,7 +350,11 @@ def main():
                          "zero-pad d_ff doubling of the serving arch "
                          "(--grow-to ignored) — the grown model is bitwise "
                          "identical, so the cache grows in place and a "
-                         "resident drafter hits 100%% acceptance")
+                         "resident drafter hits 100%% acceptance; upcycle = "
+                         "dense→MoE upcycling to the --grow-to MoE target "
+                         "(default: the serving arch's moe_target) — expert-"
+                         "replicated FFN + uniform router, function-"
+                         "preserving, cache grows in place")
     ap.add_argument("--requests", type=int, default=None,
                     help="number of requests to serve on the live path "
                          "(default 2x slots)")

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import functools
 import time
+import warnings
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -161,8 +162,17 @@ class ServingEngine:
         # the auto-disable heuristic reads wall-clock costs, so scheduling
         # becomes timing-dependent; deterministic runs can turn it off
         self.spec_autodisable = bool(spec_autodisable)
+        self.kv_layout_requested = kv_layout
+        self.kv_fallback = False
         if kv_layout == "paged" and not paged_supported(cfg):
-            kv_layout = "dense"        # windowed/recurrent: dense ring cache
+            # windowed/recurrent: dense ring cache. Fall back loudly — a
+            # silent switch made the serve report lie about the layout.
+            kv_layout = "dense"
+            self.kv_fallback = True
+            warnings.warn(
+                f"{cfg.name}: paged KV layout unsupported "
+                f"(family={cfg.family!r}, window={cfg.window}); serving "
+                "with the dense ring cache instead", stacklevel=2)
         self.kv_layout = kv_layout
         self.alloc: Optional[PageAllocator] = None
         if kv_layout == "paged":

@@ -25,8 +25,31 @@ and how long it trains::
 
 or, from the CLI, a JSON file (``launch/train.py --trajectory cfg.json``;
 schema documented in :mod:`repro.trajectory.config`) whose stages resolve
-relative to a base arch (``"half"``, ``"grow": "2x"``, or explicit registry
-names). Consecutive stages must satisfy ``spec.check_growable``.
+relative to a base arch (``"half"``, ``"grow": "2x"``, ``"grow": "moe"``,
+or explicit registry names). Consecutive stages must satisfy
+``spec.check_growable``.
+
+A stage may also hop *across model families*: ``"grow": "moe"`` resolves
+to :func:`repro.configs.moe_target` of the previous stage — its dense→MoE
+upcycling twin — and the hop is entered with the sparse-upcycling operator
+(experts initialised to the dense FFN, zero router; function-preserving at
+init, see :mod:`repro.core.upcycle`)::
+
+    traj = TrajectoryConfig(stages=(
+        Stage(cfg=small_cfg, steps=400),
+        Stage(cfg=big_cfg, steps=400,
+              growth=GrowthSpec(method="ligo", ligo_steps=100)),
+        Stage(cfg=moe_target(big_cfg), steps=800,     # dense -> MoE
+              growth=GrowthSpec(method="upcycle")),
+    ), batch=32, seq=128, lr=1e-3, checkpoint_every=100)
+
+    # JSON equivalent of the last stage:
+    #   {"steps": 800, "grow": "moe", "method": "upcycle"}
+
+Only methods in :data:`repro.trajectory.config.CROSS_FAMILY_METHODS` may
+cross a family boundary — a classical dense operator (stackbert, net2net,
+…) on a cross-family stage is a config-load-time ``ValueError`` naming the
+stage and the family pair, not a shape error mid-run.
 
 ``TrajectoryRunner(traj, ckpt_dir=..., mesh=...).run()`` executes the whole
 schedule as one resumable job: each checkpoint's meta records

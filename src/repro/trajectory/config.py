@@ -50,11 +50,18 @@ from repro.configs.base import ModelConfig
 from repro.core import spec as S
 
 
+# Growth methods that understand a family-changing hop (dense→MoE
+# upcycling): the classical dense operators (stackbert, net2net, …) assume
+# the target tree mirrors the source and would mis-build the expert stack.
+CROSS_FAMILY_METHODS = ("upcycle", "ligo", "random")
+
+
 @dataclass(frozen=True)
 class GrowthSpec:
     """How a stage is entered from the previous one."""
     method: str = "ligo"        # ligo | stackbert | interpolation |
-    #                             net2net | bert2bert | random
+    #                             net2net | bert2bert | lemon | upcycle |
+    #                             gqa_merge | random
     ligo_steps: int = 100       # SGD steps on the operator (ligo only)
     ligo_lr: float = 1e-3
     ligo_momentum: float = 0.9
@@ -119,7 +126,17 @@ class TrajectoryConfig:
         for i in range(1, len(self.stages)):
             if self.stages[i].growth is None:
                 raise ValueError(f"stage {i} must carry a GrowthSpec")
-            S.check_growable(self.stages[i - 1].cfg, self.stages[i].cfg)
+            prev_cfg, cfg = self.stages[i - 1].cfg, self.stages[i].cfg
+            S.check_growable(prev_cfg, cfg)
+            if (prev_cfg.family != cfg.family
+                    and self.stages[i].growth.method
+                    not in CROSS_FAMILY_METHODS):
+                raise ValueError(
+                    f"stage {i}: growth method "
+                    f"{self.stages[i].growth.method!r} cannot cross the "
+                    f"{prev_cfg.family!r} -> {cfg.family!r} family hop "
+                    f"({prev_cfg.name!r} -> {cfg.name!r}); use one of "
+                    f"{list(CROSS_FAMILY_METHODS)}")
 
     # ------------------------------------------------------------------
     @property
@@ -161,7 +178,7 @@ class TrajectoryConfig:
     def from_json(src: Any) -> "TrajectoryConfig":
         """Build from a JSON file path or an already-parsed dict."""
         from repro.configs import (get_config, grow_target, half_config,
-                                   smoke_config)
+                                   moe_target, smoke_config)
         if isinstance(src, str):
             with open(src) as f:
                 obj = json.load(f)
@@ -185,10 +202,12 @@ class TrajectoryConfig:
                 cfg = get_config(entry["arch"])
                 return smoke_config(cfg) if smoke else cfg
             tok = entry.get("grow", "2x")
-            if tok != "2x":
-                raise ValueError(f"unknown grow token {tok!r} "
-                                 "(use '2x' or an explicit 'arch')")
-            return grow_target(prev)
+            if tok == "2x":
+                return grow_target(prev)
+            if tok == "moe":                 # dense→MoE upcycling target
+                return moe_target(prev)
+            raise ValueError(f"unknown grow token {tok!r} "
+                             "(use '2x', 'moe', or an explicit 'arch')")
 
         stages, prev = [], None
         for i, entry in enumerate(obj["stages"]):

@@ -233,7 +233,7 @@ def test_trajectory_config_validation_and_hash():
         TrajectoryConfig(stages=(Stage(T0, 3, GrowthSpec()),))
     with pytest.raises(ValueError):            # later stages must grow
         TrajectoryConfig(stages=(Stage(T0, 3), Stage(T1, 3)))
-    with pytest.raises(AssertionError):        # non-growable pair
+    with pytest.raises(ValueError):            # non-growable pair
         TrajectoryConfig(stages=(Stage(T1, 3),
                                  Stage(T0, 3, GrowthSpec())))
     a = TRAJ.hash()
