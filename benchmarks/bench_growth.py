@@ -30,7 +30,10 @@ the squared operator). Plus the autogrow subsystem: the elastic
 (chunked + carry-checkpointed) LiGO phase vs the monolithic scan — the
 overhead of making the hop killable, acceptance ≤5% — and the adaptive
 controller's per-step decision cost + an end-to-end auto-scheduled
-trajectory. Emits ``BENCH_growth.json`` (name, wall-time, est.
+trajectory. Plus the observability-layer overhead guard: the serving decode
+loop and the chunked LiGO phase timed with obs enabled vs the
+``set_enabled(False)`` kill switch — the instrumentation budget is <2%.
+Emits ``BENCH_growth.json`` (name, wall-time, est.
 HBM bytes) at the repo root so future PRs have a perf trajectory.
 """
 from __future__ import annotations
@@ -865,6 +868,149 @@ def _bench_autogrow(entries: List[Dict], speedups: Dict,
     }
 
 
+def _bench_obs_overhead(entries: List[Dict], speedups: Dict,
+                        rounds: int = 5) -> None:
+    """The obs hard budget: the instrumentation (spans, histograms, counter
+    groups) must cost <2% on the serving decode loop and on the LiGO scan
+    phase. Each leg runs with the layer enabled and with the global kill
+    switch thrown (``obs.set_enabled(False)``), alternating rounds so load
+    spikes on this shared box hit both variants; ratio = enabled/disabled
+    best-of-N wall, so 1.0 means free. The jit caches stay warm across
+    variants — obs never lives inside compiled code, so any delta is pure
+    host-side bookkeeping."""
+    from functools import partial
+    import numpy as np
+    from benchmarks.growth_lab import _batches
+    from repro import obs
+    from repro.core import init_ligo_params, ligo_loss
+    from repro.models import init_params
+    from repro.serving import ServingEngine
+
+    # serving leg: continuous-batching decode loop on the proxy config
+    # (each decode step takes a histogram observe; admits/finishes take
+    # span + counter + histogram hits)
+    sp_srv = init_params(PROXY_SMALL, jax.random.PRNGKey(0))
+
+    def serve_run(on_step=None) -> None:
+        eng = ServingEngine(sp_srv, PROXY_SMALL, slots=4, prompt_budget=8,
+                            gen_budget=24, queue_capacity=64)
+        rng = np.random.RandomState(0)
+        for i in range(8):
+            eng.submit(list(rng.randint(0, PROXY_SMALL.vocab_size,
+                                        4 + i % 4)), max_new=24)
+        eng.run(on_step=on_step)
+
+    # LiGO-phase leg: the train_ligo chunk loop (per-chunk span +
+    # histogram observe + host loss sync — exactly the instrumented
+    # pattern in repro.core.grow), with the one-time trace/compile hoisted
+    # out of the timed region. Obs never lives inside compiled code, so
+    # compile walls are instrumentation-free by construction; leaving them
+    # in would only drown the µs-scale delta in seconds of XLA noise.
+    lab = dataclasses.replace(LabConfig(), batch=8, seq=32)
+    c1, c2 = lab.small, lab.big
+    sp = init_params(c1, jax.random.PRNGKey(0))
+    lg = init_ligo_params(jax.random.PRNGKey(1), c1, c2)
+    steps, chunk = 24, 3               # 8 chunks -> 8 span/histogram hits
+    grad_fn = jax.value_and_grad(
+        partial(ligo_loss, cfg1=c1, cfg2=c2), argnums=0)
+
+    def sgd_step(carry, batch):
+        ligo, mom = carry
+        loss, g = grad_fn(ligo, sp, batch=batch)
+        mom = jax.tree.map(lambda m, gg: 0.9 * m + gg, mom, g)
+        ligo = jax.tree.map(lambda p, m: p - 1e-3 * m, ligo, mom)
+        return (ligo, mom), loss
+
+    @jax.jit
+    def run_chunk(ligo, mom, batches):
+        (ligo, mom), losses = jax.lax.scan(sgd_step, (ligo, mom), batches)
+        return ligo, mom, losses
+
+    it = _batches(c1, lab, 0, lab.seed)
+    chunk_batches = [
+        jax.tree.map(lambda *xs: jnp.stack(xs),
+                     *[next(it) for _ in range(chunk)])
+        for _ in range(steps // chunk)]
+    mom0 = jax.tree.map(jnp.zeros_like, lg)
+    h_chunk = obs.histogram("ligo.chunk_ms")
+
+    def ligo_rounds(n) -> Dict[bool, List[float]]:
+        # toggle the kill switch per *chunk* (starting parity flips per
+        # round): paired samples land microseconds apart under identical
+        # box load, so the per-variant minima share one noise floor —
+        # per-round alternation left seconds of load drift on one side
+        out: Dict[bool, List[float]] = {True: [], False: []}
+        try:
+            for r in range(n):
+                ligo, mom, losses = lg, mom0, []
+                for i, cb in enumerate(chunk_batches):
+                    on = (i + r) % 2 == 0
+                    obs.set_enabled(on)
+                    t0 = time.perf_counter()
+                    with obs.span("ligo.chunk", start=i * chunk,
+                                  n=chunk) as sp_c:
+                        ligo, mom, cl = run_chunk(ligo, mom, cb)
+                        losses.extend(float(l) for l in cl)
+                    h_chunk.observe(sp_c.dur_ms or 0.0)
+                    out[on].append(time.perf_counter() - t0)
+        finally:
+            obs.set_enabled(True)
+        return out
+
+    def serve_rounds(n) -> Dict[bool, List[float]]:
+        # same fine-grained pairing as the ligo leg: toggle the kill
+        # switch per scheduler round (via on_step) and time the interval
+        # between callbacks — each interval is one decode round + its
+        # per-step instrumentation, and neighbouring on/off samples see
+        # identical box load
+        out: Dict[bool, List[float]] = {True: [], False: []}
+        try:
+            for r in range(n):
+                st = [None, r % 2 == 0]      # [t_prev, state of next step]
+
+                def on_step(e, _s=st):
+                    t = time.perf_counter()
+                    if _s[0] is not None:
+                        out[_s[1]].append(t - _s[0])
+                    _s[1] = not _s[1]
+                    obs.set_enabled(_s[1])
+                    _s[0] = t
+
+                obs.set_enabled(st[1])
+                serve_run(on_step)
+        finally:
+            obs.set_enabled(True)
+        return out
+
+    serve_run()                        # warm the jit caches once
+    ligo_rounds(1)
+    walls = {"serving": serve_rounds(rounds),
+             "ligo_phase": ligo_rounds(2 * rounds)}
+
+    ratios = {}
+    for leg, note in (
+            ("serving", "one continuous-batching scheduler round on the "
+                        "proxy config (8 req x 24 tok; kill switch "
+                        "toggled per round via on_step)"),
+            ("ligo_phase", f"LiGO-phase chunk wall ({chunk}-step chunk, "
+                           "best of 8/round; compile hoisted: obs never "
+                           "runs inside jit)")):
+        on_ms = min(walls[leg][True]) * 1e3
+        off_ms = min(walls[leg][False]) * 1e3
+        ratios[f"{leg}_ratio"] = round(on_ms / off_ms, 4)
+        entries.extend([
+            {"name": f"obs_overhead[{leg}]/enabled",
+             "wall_ms": round(on_ms, 3), "est_hbm_bytes": None,
+             "note": f"{note}; obs spans+metrics live "
+                     f"(best of {rounds})"},
+            {"name": f"obs_overhead[{leg}]/disabled",
+             "wall_ms": round(off_ms, 3), "est_hbm_bytes": None,
+             "note": f"{note}; obs.set_enabled(False) kill switch "
+                     f"(best of {rounds})"},
+        ])
+    speedups["obs_overhead"] = ratios
+
+
 def engine_bench(quick: bool = False, out_path: Optional[str] = None) -> Dict:
     """Time plan vs legacy apply_ligo + a train_ligo step; write
     BENCH_growth.json. ``quick`` skips the full-size BERT pair."""
@@ -887,6 +1033,7 @@ def engine_bench(quick: bool = False, out_path: Optional[str] = None) -> Dict:
                         chunk=4 if quick else 8)
     _bench_autogrow(entries, speedups,
                     decisions=1000 if quick else 5000)
+    _bench_obs_overhead(entries, speedups, rounds=3 if quick else 5)
     out = {
         "backend": jax.default_backend(),
         "pallas_leg": "excluded on CPU (interpret mode is not a timing "

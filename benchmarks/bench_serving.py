@@ -123,9 +123,7 @@ def _bench_live_hop(params, op, cfg2, label, *, hop_at=12, slots=8,
     assert hop.completed, "hop did not complete"
 
     gen_tokens = sum(len(r.tokens) for r in eng.requests)
-    steps = np.asarray(eng.step_times_ms)
-    p50, p99 = float(np.percentile(steps, 50)), float(np.percentile(steps,
-                                                                    99))
+    p50, p99 = eng.decode_step_percentiles(50, 99)
     tok_s = gen_tokens / wall_s
     entries.extend([
         {"name": f"serving[{label}]/decode_step_p50",
@@ -271,8 +269,7 @@ def _bench_spec_decode(*, hop_at=2, slots=8, prompt_budget=16,
     ratio = tok_s_s / tok_s_g
     entries.extend([
         {"name": "serving[spec]/decode_round_p50",
-         "wall_ms": round(float(np.percentile(
-             np.asarray(eng_s.step_times_ms), 50)), 3),
+         "wall_ms": round(eng_s.decode_step_percentiles(50)[0], 3),
          "est_hbm_bytes": None,
          "note": f"draft K={spec_k} with resident {SPEC_SMALL.name} + one "
                  f"batched verify of {SPEC_WIDE.name}; acceptance "

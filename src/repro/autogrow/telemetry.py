@@ -21,11 +21,19 @@ The stream must survive a kill: :meth:`snapshot` emits a small JSON-safe dict
 stamps into every checkpoint's meta, and :meth:`restore` rebuilds an
 identical stream — so a resumed stage makes the *same* growth decision at the
 same step as the uninterrupted run.
+
+The stream also *publishes* to the obs registry (write-only gauges:
+``autogrow.loss``, ``autogrow.loss_ema``, ``autogrow.rpf``,
+``autogrow.peak_rpf``, ``autogrow.cum_flops``). Policies never read the
+registry — decisions are a function of the ring alone, so the
+replay-determinism contract above is untouched.
 """
 from __future__ import annotations
 
 from collections import deque
 from typing import Dict, List, Optional
+
+from repro import obs
 
 
 class Telemetry:
@@ -46,6 +54,12 @@ class Telemetry:
         self.cum_flops = 0.0
         self.cum_tokens = 0.0
         self.peak_rpf = 0.0
+        # write-only registry mirror; never read back for decisions
+        self._g_loss = obs.gauge("autogrow.loss")
+        self._g_ema = obs.gauge("autogrow.loss_ema")
+        self._g_rpf = obs.gauge("autogrow.rpf")
+        self._g_peak = obs.gauge("autogrow.peak_rpf")
+        self._g_flops = obs.gauge("autogrow.cum_flops")
 
     # ------------------------------------------------------------------
     def record(self, step: int, loss: float) -> None:
@@ -60,6 +74,12 @@ class Telemetry:
         r = self.rpf()
         if r is not None and r > self.peak_rpf:
             self.peak_rpf = r
+        self._g_loss.set(loss)
+        self._g_ema.set(self._ema)
+        self._g_flops.set(self.cum_flops)
+        if r is not None:
+            self._g_rpf.set(r)
+            self._g_peak.set(self.peak_rpf)
 
     def __len__(self) -> int:
         return len(self._ring)

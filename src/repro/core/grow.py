@@ -22,7 +22,6 @@ yields global batches; apply_ligo is pure einsums so GSPMD shards the growth.
 """
 from __future__ import annotations
 
-from collections import Counter
 from functools import partial
 from typing import Any, Dict, Iterator, Optional, Tuple
 
@@ -34,10 +33,13 @@ from repro.core.ligo import apply_ligo, init_ligo_params
 from repro.core import operators as ops
 from repro.models.losses import loss_fn
 from repro.models.model import init_params
+from repro import obs
 
 # How many times each compiled region was (re-)traced — tests assert the LiGO
-# phase compiles once regardless of step count.
-TRACE_COUNTS: Counter = Counter()
+# phase compiles once regardless of step count. Locked counter group
+# ("core.traces" in the obs registry): the hop's background grow thread may
+# trace concurrently with the decode loop.
+TRACE_COUNTS: obs.CounterGroup = obs.counter_group("core.traces")
 
 
 def ligo_loss(ligo, small_params, cfg1: ModelConfig, cfg2: ModelConfig,
@@ -119,7 +121,7 @@ def train_ligo(ligo, small_params, cfg1: ModelConfig, cfg2: ModelConfig,
         return (ligo, mom), loss
 
     def run_chunk(ligo, mom, batches):
-        TRACE_COUNTS["train_ligo"] += 1
+        TRACE_COUNTS.inc("train_ligo")
         (ligo, mom), losses = jax.lax.scan(sgd_step, (ligo, mom), batches)
         return ligo, mom, losses
 
@@ -156,6 +158,7 @@ def train_ligo(ligo, small_params, cfg1: ModelConfig, cfg2: ModelConfig,
             losses = [float(x) for x in saved.get("losses", [])][:start]
             print(f"[ligo] resumed LiGO phase at step {start}/{steps}",
                   flush=True)
+            obs.event("ligo.resume", step=start, steps=steps)
 
     if jit:
         # Donating the (ligo, momentum) carry keeps the phase zero-copy
@@ -173,11 +176,17 @@ def train_ligo(ligo, small_params, cfg1: ModelConfig, cfg2: ModelConfig,
 
     done = start
     chunks_done = 0
+    h_chunk = obs.histogram("ligo.chunk_ms")
+    h_ckpt = obs.histogram("ligo.checkpoint_ms")
     while done < steps:
         n = min(chunk, steps - done)
-        batches = _stack_batches([next(data_it) for _ in range(n)])
-        ligo, mom, chunk_losses = run_chunk(ligo, mom, batches)
-        losses.extend(float(l) for l in chunk_losses)
+        # host-boundary timing: float(l) on the losses forces the sync, so
+        # the span wall covers the whole compiled chunk, never intrudes on it
+        with obs.span("ligo.chunk", start=done, n=n) as sp_chunk:
+            batches = _stack_batches([next(data_it) for _ in range(n)])
+            ligo, mom, chunk_losses = run_chunk(ligo, mom, batches)
+            losses.extend(float(l) for l in chunk_losses)
+        h_chunk.observe(sp_chunk.dur_ms or 0.0)
         done += n
         chunks_done += 1
         failing = fail_at is not None and fail_at <= done < steps
@@ -191,9 +200,11 @@ def train_ligo(ligo, small_params, cfg1: ModelConfig, cfg2: ModelConfig,
             # chunk loop never blocks on the copy-out. An injected failure
             # forces the save even off-cadence: the chaos contract is
             # "checkpoint durably written, then die".
-            phase_ckpt.save(done, {"ligo": ligo, "mom": mom},
-                            {**pid, "phase_step": done, "losses": losses},
-                            snapshot="device")
+            with obs.span("ligo.checkpoint", step=done) as sp_ckpt:
+                phase_ckpt.save(done, {"ligo": ligo, "mom": mom},
+                                {**pid, "phase_step": done, "losses": losses},
+                                snapshot="device")
+            h_ckpt.observe(sp_ckpt.dur_ms or 0.0)
         if failing:
             if phase_ckpt is not None:
                 phase_ckpt.wait()          # the injected kill must be durable

@@ -21,12 +21,13 @@ HBM-doubling upcast for bf16 trees).
 
 ``LAUNCH_COUNTS`` is trace-time instrumentation: tests assert the plan engine
 issues one fused launch per leaf group (not per leaf) by tracing an apply and
-counting.
+counting. It is a locked :class:`repro.obs.CounterGroup` ("kernels.launches"
+in the obs registry), so the hop's background grow thread can trace
+concurrently with the decode loop without losing increments.
 """
 from __future__ import annotations
 
 import functools
-from collections import Counter
 
 import jax
 import jax.numpy as jnp
@@ -39,9 +40,11 @@ from repro.kernels.ligo_expand import (fused_eligible, fused_vmem_bytes,
                                        _blend_expand_grouped)
 from repro.kernels.ligo_expand_bwd import (ligo_blend_expand_bwd_fused as
                                            _bwd_fused)
+from repro.obs import CounterGroup, counter_group
 
-# Trace-time fused-kernel launch counter ({"fwd": n, "bwd": n} per trace).
-LAUNCH_COUNTS: Counter = Counter()
+# Trace-time fused-kernel launch counter ({"fwd": n, "bwd": n} per trace),
+# thread-safe (locked), registered in the obs registry as "kernels.launches".
+LAUNCH_COUNTS: CounterGroup = counter_group("kernels.launches")
 
 
 def _interpret() -> bool:
@@ -78,7 +81,7 @@ def ligo_grow(w, B, A, W, **kw):
 # ---------------------------------------------------------------------------
 def _grouped_impl(w, B, W, use_kernel: bool):
     if use_kernel:
-        LAUNCH_COUNTS["fwd"] += 1
+        LAUNCH_COUNTS.inc("fwd")
         return _blend_expand_grouped(w, B, W, interpret=_interpret())
     return ref.ligo_blend_expand_grouped_ref(w, B, W)
 
@@ -102,7 +105,7 @@ def _grouped_bwd(use_kernel, res, dP):
     """
     w, B, W = res
     if use_kernel:
-        LAUNCH_COUNTS["bwd"] += 1
+        LAUNCH_COUNTS.inc("bwd")
         return _bwd_fused(w, B, W, dP, interpret=_interpret())
     return ref.ligo_blend_expand_bwd_ref(w, B, W, dP)
 

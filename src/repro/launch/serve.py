@@ -42,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, grow_target, moe_target, smoke_config
-from repro import compat
+from repro import compat, obs
 from repro.data import gen_tokens
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.model import decode_step, init_params, prefill
@@ -231,11 +231,11 @@ def _serve_live(args, cfg, params, mesh):
     wall = time.perf_counter() - t0
 
     c = engine.counts()
-    times = np.asarray(engine.step_times_ms)
     total = sum(len(r.tokens) for r in engine.requests
                 if r.status == "done")
-    p50, p99 = (np.percentile(times, [50, 99]) if times.size
-                else (0.0, 0.0))
+    p50, p99 = engine.decode_step_percentiles(50, 99)
+    if np.isnan(p50):
+        p50 = p99 = 0.0
     print(f"[serve] live-hop serve: arch={cfg.name} -> "
           f"{cfg2.name if hop.completed else cfg.name} slots={args.batch} "
           f"requests={n_req}")
@@ -359,6 +359,16 @@ def main():
                     help="number of requests to serve on the live path "
                          "(default 2x slots)")
     ap.add_argument("--queue-cap", type=int, default=64)
+    ap.add_argument("--obs-log", default=None, metavar="FILE",
+                    help="stream span/metric events as JSONL to FILE; "
+                         "hop flight-recorder dumps land in its directory")
+    ap.add_argument("--obs-report", action="store_true",
+                    help="print the observability summary at exit "
+                         "(p50/p99 decode through-hop, acceptance, pool "
+                         "pressure, per-hop-stage walls)")
+    ap.add_argument("--obs-profile", default=None, metavar="DIR",
+                    help="wrap the run in jax.profiler start/stop_trace, "
+                         "writing the trace to DIR")
     ap.add_argument("--grow-to", default=None, metavar="ARCH[,ARCH...]",
                     help="hot-grow the checkpoint to this arch (or '2x' for "
                          "a doubled-depth/1.5x-width same-family target) at "
@@ -374,6 +384,20 @@ def main():
                          "grow in place on the production mesh")
     args = ap.parse_args()
 
+    if args.obs_log:
+        obs.attach_jsonl(args.obs_log)
+    try:
+        with obs.profile(args.obs_profile):
+            _serve(args)
+    finally:
+        if args.obs_report:
+            print(obs.report())
+        if args.obs_log:
+            path = obs.close_jsonl()
+            print(f"[obs] structured log written to {path}")
+
+
+def _serve(args):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)

@@ -35,7 +35,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import (TrainConfig, get_config, half_config, smoke_config)
-from repro import compat
+from repro import compat, obs
 from repro.core import grow
 from repro.data import GlobalBatchLoader
 from repro.distributed.sharding import named_shardings, params_pspecs
@@ -93,8 +93,31 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--checkpoint-every", type=int, default=100)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--obs-log", default=None, metavar="FILE",
+                    help="stream span/metric events as JSONL to FILE "
+                         "(ligo.chunk/checkpoint spans, traj.train/grow "
+                         "stage walls, autogrow gauges)")
+    ap.add_argument("--obs-report", action="store_true",
+                    help="print the observability summary at exit")
+    ap.add_argument("--obs-profile", default=None, metavar="DIR",
+                    help="wrap the run in jax.profiler start/stop_trace, "
+                         "writing the trace to DIR")
     args = ap.parse_args()
 
+    if args.obs_log:
+        obs.attach_jsonl(args.obs_log)
+    try:
+        with obs.profile(args.obs_profile):
+            _train(args)
+    finally:
+        if args.obs_report:
+            print(obs.report())
+        if args.obs_log:
+            path = obs.close_jsonl()
+            print(f"[obs] structured log written to {path}")
+
+
+def _train(args):
     if args.trajectory and args.autogrow:
         raise SystemExit("--trajectory and --autogrow are exclusive "
                          "(they name the same schedule file)")

@@ -1,0 +1,55 @@
+"""Unified observability: structured tracing, metrics, and the flight recorder.
+
+One subsystem answers "what happened during that hop and what did it cost
+each request" across the whole train→grow→serve lifecycle:
+
+- **Spans & events** (:mod:`repro.obs.trace`) — ``span("hop.grow", gen=3)``
+  context manager (thread-safe, monotonic clock, parent/child nesting) and
+  point events, recorded into a bounded in-memory **flight recorder** ring
+  that dumps as JSONL on demand and automatically on hop
+  rollback/retry/watchdog-fire.
+- **Metrics** (:mod:`repro.obs.metrics`) — typed counters, gauges, and
+  fixed-bucket histograms (p50/p99 reconstructed from buckets, within one
+  bucket width of a NumPy oracle) in a process-global named registry.
+- **Export** (:mod:`repro.obs.export`, :mod:`repro.obs.prom`) — JSONL
+  streaming (``--obs-log``), the human report (``--obs-report``),
+  Prometheus text format, and ``jax.profiler`` gating (``--obs-profile``).
+
+Naming scheme: ``<layer>.<unit>[_<ms|s>]`` with dots — ``serve.decode.step_ms``,
+``serve.request.ttft_ms``, ``serve.spec.acc_ema``, ``serve.kv.pool_in_use_blocks``,
+``hop.watchdog.budget_s``, ``kernels.launches``, ``core.traces``,
+``ligo.chunk_ms``, ``traj.stage.train_ms``. Span names mirror the subsystem:
+``hop.grow`` / ``hop.cache-grow`` / ``hop.swap``, ``serve.prefill``,
+``ligo.phase`` / ``ligo.chunk`` / ``ligo.checkpoint``, ``traj.train`` /
+``traj.grow``.
+
+Hard rule: **instrumentation never runs inside jitted code.** Record at
+host boundaries only — after ``block_until_ready``, around launches, or at
+trace time for trace counters. ``set_enabled(False)`` is the global kill
+switch (spans no-op, metric writes early-return); the ``obs_overhead``
+bench entry in ``BENCH_growth.json`` holds the enabled/disabled cost ratio
+at ≤ 1.02x on the serving and LiGO-phase legs.
+"""
+from repro.obs.metrics import (
+    Counter, CounterGroup, Gauge, Histogram, MetricsRegistry, MS_BUCKETS,
+    RATE_BUCKETS, REGISTRY, S_BUCKETS, counter, counter_group, gauge,
+    histogram,
+)
+from repro.obs.trace import (
+    FLIGHT, FlightRecorder, dump_dir, enabled, event, flight_dump,
+    set_dump_dir, set_enabled, span,
+)
+from repro.obs.export import attach_jsonl, close_jsonl, profile, report
+from repro.obs import prom
+
+__all__ = [
+    # metrics
+    "Counter", "CounterGroup", "Gauge", "Histogram", "MetricsRegistry",
+    "REGISTRY", "counter", "counter_group", "gauge", "histogram",
+    "MS_BUCKETS", "S_BUCKETS", "RATE_BUCKETS",
+    # tracing
+    "FLIGHT", "FlightRecorder", "span", "event", "flight_dump",
+    "set_dump_dir", "dump_dir", "set_enabled", "enabled",
+    # export
+    "attach_jsonl", "close_jsonl", "report", "profile", "prom",
+]

@@ -1,0 +1,24 @@
+"""Global on/off switch for the observability layer.
+
+One module so :mod:`repro.obs.trace` and :mod:`repro.obs.metrics` can share
+it without importing each other. Disabling turns ``span()`` into a shared
+no-op context manager and makes counter/gauge/histogram writes early-return
+— the mechanism behind the ``obs_overhead`` bench's "off" leg.
+
+Note :class:`repro.obs.metrics.CounterGroup` increments are *not* gated:
+the kernel/trace counters are functional instrumentation that tests assert
+on (and they fire at trace time, not per step), so they keep counting even
+when the observability layer is switched off.
+"""
+from __future__ import annotations
+
+_ENABLED = True
+
+
+def set_enabled(on: bool) -> None:
+    global _ENABLED
+    _ENABLED = bool(on)
+
+
+def enabled() -> bool:
+    return _ENABLED

@@ -1,0 +1,73 @@
+"""Prometheus text-format renderer for the obs registry.
+
+``render()`` emits the standard exposition format (version 0.0.4) so the
+registry is scrape-ready behind any HTTP handler the deployment provides:
+
+- counters        -> ``name_total <v>``
+- counter groups  -> ``name_total{key="fwd"} <v>``
+- gauges          -> ``name <v>`` (unset gauges are skipped)
+- histograms      -> cumulative ``name_bucket{le="..."}`` series plus
+                     ``name_sum`` / ``name_count``
+
+Metric names are sanitised (dots become underscores) per the Prometheus
+data model.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Optional
+
+from repro.obs.metrics import REGISTRY, MetricsRegistry
+
+__all__ = ["render", "sanitize"]
+
+_NAME_RE = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def sanitize(name: str) -> str:
+    s = _NAME_RE.sub("_", name)
+    if s and s[0].isdigit():
+        s = "_" + s
+    return s
+
+
+def _num(v: float) -> str:
+    if v == math.inf:
+        return "+Inf"
+    if isinstance(v, float) and v.is_integer():
+        return str(int(v))
+    return repr(v)
+
+
+def render(registry: Optional[MetricsRegistry] = None) -> str:
+    reg = registry if registry is not None else REGISTRY
+    out = []
+    for name, snap in reg.snapshot().items():
+        pname = sanitize(name)
+        kind = snap["kind"]
+        if kind == "counter":
+            out.append(f"# TYPE {pname}_total counter")
+            out.append(f"{pname}_total {snap['value']}")
+        elif kind == "counters":
+            if not snap["values"]:
+                continue
+            out.append(f"# TYPE {pname}_total counter")
+            for key, v in sorted(snap["values"].items()):
+                out.append(f'{pname}_total{{key="{key}"}} {v}')
+        elif kind == "gauge":
+            if snap["value"] is None:
+                continue
+            out.append(f"# TYPE {pname} gauge")
+            out.append(f"{pname} {_num(snap['value'])}")
+        elif kind == "histogram":
+            out.append(f"# TYPE {pname} histogram")
+            cum = 0
+            for edge, c in zip(snap["buckets"], snap["counts"]):
+                cum += c
+                out.append(f'{pname}_bucket{{le="{_num(float(edge))}"}} {cum}')
+            cum += snap["counts"][-1]
+            out.append(f'{pname}_bucket{{le="+Inf"}} {cum}')
+            out.append(f"{pname}_sum {_num(float(snap['sum']))}")
+            out.append(f"{pname}_count {snap['count']}")
+    return "\n".join(out) + ("\n" if out else "")

@@ -31,12 +31,14 @@ from __future__ import annotations
 import functools
 import time
 import warnings
-from typing import Any, Dict, List, Optional
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.models.model import (_pad_attn_caches, decode_step, forward,
                                 init_decode_state, unembed)
@@ -46,6 +48,7 @@ from repro.serving.kv_pages import (PageAllocator, init_paged_caches,
                                     paged_supported, scatter_row_blocks)
 
 _EMA = 0.3          # telemetry smoothing for acceptance / launch costs
+_RECENT_STEPS = 4096  # exact-window size behind the step_times_ms shim
 
 
 @functools.lru_cache(maxsize=16)
@@ -153,7 +156,23 @@ class ServingEngine:
         self.queue = AdmissionQueue(queue_capacity)
         self.requests: List[Request] = []
         self.slot_req: List[Optional[Request]] = [None] * slots
-        self.step_times_ms: List[float] = []
+        # decode-step walls: bounded recent window (exact percentiles for
+        # the report) + an obs histogram (full-run p50/p99 in O(buckets)
+        # memory). The old unbounded ``step_times_ms`` list is a
+        # deprecated property shim over the window.
+        self._recent_steps: deque = deque(maxlen=_RECENT_STEPS)
+        self._h_step = obs.histogram("serve.decode.step_ms")
+        self._h_queue_wait = obs.histogram("serve.request.queue_wait_ms")
+        self._h_ttft = obs.histogram("serve.request.ttft_ms")
+        self._h_tok_s = obs.histogram("serve.request.tokens_per_s",
+                                      buckets=obs.RATE_BUCKETS)
+        self._h_draft = obs.histogram("serve.spec.draft_ms")
+        self._h_verify = obs.histogram("serve.spec.verify_ms")
+        self._g_acc = obs.gauge("serve.spec.acc_ema")
+        self._g_est = obs.gauge("serve.spec.est_speedup")
+        self._c_req = obs.counter_group("serve.requests")
+        for k in ("submitted", "done", "rejected", "dropped", "deferred"):
+            self._c_req.inc(k, 0)       # declare: dump shows explicit zeros
         self.decode_steps = 0
         self.temperature = float(temperature)
         self.top_p = float(top_p)
@@ -220,6 +239,9 @@ class ServingEngine:
         if state is None:
             state = self.fresh_state(cfg)
         hopped = hasattr(self, "cfg")
+        if hopped:
+            obs.event("serve.install", src=self.cfg.name, dst=cfg.name,
+                      live=len(self.live))
         self.cfg, self.params, self.state = cfg, params, state
         self.cap = cap
         self._prefill, self._decode, self._insert = fns
@@ -280,9 +302,11 @@ class ServingEngine:
         req.sample_key = len(self.requests)
         req.t_submit = time.perf_counter()
         self.requests.append(req)
+        self._c_req.inc("submitted")
         if not (0 < len(req.prompt) <= self.prompt_budget):
             req.status = "rejected"
             self.queue.rejected += 1
+            self._c_req.inc("rejected")
             return req
         req.max_new = min(max_new, self.max_len - len(req.prompt))
         self.queue.submit(req)
@@ -302,6 +326,31 @@ class ServingEngine:
     def has_work(self) -> bool:
         return bool(len(self.queue)) or any(
             r is not None for r in self.slot_req)
+
+    # -- decode-step timing ---------------------------------------------------
+    def _observe_step(self, ms: float) -> None:
+        self._recent_steps.append(ms)
+        self._h_step.observe(ms)
+
+    @property
+    def step_times_ms(self) -> List[float]:
+        """Deprecated: the old unbounded per-step list, now a bounded
+        recent window (last ``_RECENT_STEPS`` steps). Use
+        :meth:`decode_step_percentiles` or the ``serve.decode.step_ms``
+        obs histogram instead."""
+        warnings.warn(
+            "ServingEngine.step_times_ms is deprecated; use "
+            "decode_step_percentiles() or the 'serve.decode.step_ms' "
+            "histogram in repro.obs.REGISTRY",
+            DeprecationWarning, stacklevel=2)
+        return list(self._recent_steps)
+
+    def decode_step_percentiles(self, *qs: float) -> Tuple[float, ...]:
+        """Exact percentiles over the recent decode-step window (ms)."""
+        if not self._recent_steps:
+            return tuple(float("nan") for _ in qs)
+        arr = np.asarray(self._recent_steps)
+        return tuple(float(np.percentile(arr, q)) for q in qs)
 
     # -- host-side sampling --------------------------------------------------
     def _pick_token(self, req: Request, logits_row: np.ndarray) -> int:
@@ -348,21 +397,27 @@ class ServingEngine:
                 if head is None:
                     return
                 if not self.alloc.can_admit(self._worst_len(head)):
+                    self._c_req.inc("deferred")
                     return              # stays queued: deferred, never dropped
             req = self.queue.pop()
             if req is None:
                 return
+            self._h_queue_wait.observe(
+                (time.perf_counter() - req.t_submit) * 1e3)
             req.true_len = len(req.prompt)
             if self.alloc is not None:
                 self.alloc.admit(slot, req.true_len, self._worst_len(req))
             toks = np.zeros((1, self.prompt_budget), np.int32)
             toks[0, :req.true_len] = req.prompt
-            out = self._prefill(self.params, jnp.asarray(toks),
-                                jnp.asarray(req.true_len))
-            logits, caches = out[0], out[1]
-            self.state = self._insert(self._sync_state(self.state), caches,
-                                      jnp.asarray(req.true_len, jnp.int32),
-                                      jnp.asarray(slot, jnp.int32))
+            with obs.span("serve.prefill", slot=slot, uid=req.uid,
+                          prompt_len=req.true_len):
+                out = self._prefill(self.params, jnp.asarray(toks),
+                                    jnp.asarray(req.true_len))
+                logits, caches = out[0], out[1]
+                self.state = self._insert(
+                    self._sync_state(self.state), caches,
+                    jnp.asarray(req.true_len, jnp.int32),
+                    jnp.asarray(slot, jnp.int32))
             self.pos_host[slot] = req.true_len
             if self.keep_residual:
                 h = np.asarray(out[2][0], np.float32)
@@ -377,6 +432,7 @@ class ServingEngine:
                     jnp.asarray(slot, jnp.int32))
             req.tokens.append(self._pick_token(req, np.asarray(logits)))
             req.t_first = time.perf_counter()
+            self._h_ttft.observe((req.t_first - req.t_submit) * 1e3)
             req.status, req.slot = "running", slot
             self.slot_req[slot] = req
             self._finish_if_done(req)
@@ -386,6 +442,10 @@ class ServingEngine:
                 or req.true_len + len(req.tokens) >= self.max_len):
             req.status = "done"
             req.t_done = time.perf_counter()
+            self._c_req.inc("done")
+            dt = req.t_done - req.t_submit
+            if dt > 0:
+                self._h_tok_s.observe(len(req.tokens) / dt)
             self.slot_req[req.slot] = None
             if self.alloc is not None:
                 self.alloc.release(req.slot)
@@ -424,7 +484,7 @@ class ServingEngine:
         out = self._decode(self.params, state, jnp.asarray(last))
         logits = out[0]
         logits.block_until_ready()
-        self.step_times_ms.append((time.perf_counter() - t0) * 1e3)
+        self._observe_step((time.perf_counter() - t0) * 1e3)
         self.decode_steps += 1
         self.state = out[1]
         L = np.asarray(logits)
@@ -462,7 +522,7 @@ class ServingEngine:
         v_out = self._verify(self.params, state, jnp.asarray(inputs))
         v_out[0].block_until_ready()
         t2 = time.perf_counter()
-        self.step_times_ms.append((t2 - t0) * 1e3)
+        self._observe_step((t2 - t0) * 1e3)
         self.decode_steps += 1
         L = np.asarray(v_out[0])                       # (slots, K+1, V)
         hid = (np.asarray(v_out[1], np.float32)
@@ -508,6 +568,10 @@ class ServingEngine:
         est = ((st["acc_ema"] * K + 1)
                / (1 + K * st["c_draft"] / max(st["c_verify"], 1e-9)))
         st["est_speedup"] = est
+        self._h_draft.observe(t_draft * 1e3)
+        self._h_verify.observe(t_verify * 1e3)
+        self._g_acc.set(st["acc_ema"])
+        self._g_est.set(est)
         if self.spec_autodisable and st["rounds"] >= 3 and est < 1.0:
             self.spec_enabled = False
             st["disabled"] = (f"est speedup {est:.2f}x < 1 after "

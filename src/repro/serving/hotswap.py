@@ -29,6 +29,7 @@ from typing import Optional
 
 import jax
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.core.grow_cache import (CacheGrowthError, can_grow_cache,
                                    depth_replay_plan, grow_decode_state,
@@ -72,6 +73,7 @@ class HopWatchdog:
     def observe(self, dt: float) -> None:
         self.ewma = dt if self.ewma is None else (
             self.alpha * dt + (1 - self.alpha) * self.ewma)
+        self.publish()
 
     def seed(self, dt: float) -> None:
         """Prime a cold watchdog with a measured (or configured) first-hop
@@ -79,6 +81,15 @@ class HopWatchdog:
         self.floor = max(self.floor, dt)
         if self.ewma is None:
             self.ewma = dt
+        self.publish()
+
+    def publish(self) -> None:
+        """Expose EWMA/deadline/floor as obs gauges, so watchdog tuning is
+        observable instead of inferred from timeouts."""
+        if self.ewma is not None:
+            obs.gauge("hop.watchdog.ewma_s").set(self.ewma)
+        obs.gauge("hop.watchdog.budget_s").set(self.budget())
+        obs.gauge("hop.watchdog.floor_s").set(self.floor)
 
 
 class HopController:
@@ -164,7 +175,9 @@ class HopController:
         bug: the first *live* hop is judged against a measured budget
         instead of a bare timeout it might legitimately exceed."""
         t0 = time.perf_counter()
-        buf = self._grow_once()
+        with obs.span("hop.warm", src=self.engine.cfg.name,
+                      dst=self.cfg2.name):
+            buf = self._grow_once()
         dt = time.perf_counter() - t0
         del buf
         self.watchdog.seed(dt)
@@ -181,9 +194,16 @@ class HopController:
         self._abort = threading.Event()
         abort = self._abort
         self._t_launch = time.perf_counter()
+
+        def grow_traced():
+            # span opens in whichever thread runs the grow, so the dump
+            # shows the background thread name next to the stage wall
+            with obs.span("hop.grow", gen=gen, attempt=self.attempts):
+                return self._stage_grow(abort)
+
         if not self.background:
             try:
-                buf = self._stage_grow(abort)
+                buf = grow_traced()
                 with self._lock:
                     self._buf = buf
             except Exception as e:                     # noqa: BLE001
@@ -193,7 +213,7 @@ class HopController:
 
         def run():
             try:
-                buf = self._stage_grow(abort)
+                buf = grow_traced()
                 with self._lock:
                     if gen == self._gen:
                         self._buf = buf
@@ -211,6 +231,8 @@ class HopController:
         print(f"[hop] beginning live hop {eng.cfg.name} -> {self.cfg2.name} "
               f"({'background' if self.background else 'synchronous'} grow, "
               f"{len(eng.live)} live sessions)")
+        obs.event("hop.begin", src=eng.cfg.name, dst=self.cfg2.name,
+                  live=len(eng.live), background=self.background)
         self._t_begin = time.perf_counter()
         self._launch()
 
@@ -224,15 +246,24 @@ class HopController:
         print(f"[hop] hop FAILED at stage={stage}: {err}; rolled back — "
               f"engine keeps serving {eng.cfg.name} "
               f"({len(eng.live)} in-flight sessions intact, 0 dropped)")
+        obs.event("hop.rollback", stage=stage, cause=str(err),
+                  attempt=self.attempts, gen=self._gen,
+                  wall_s=round(time.perf_counter() - (self._t_begin or 0), 3),
+                  live=len(eng.live), dropped=0)
         if self.attempts <= self.retries:
             delay = self.backoff * (2 ** (self.attempts - 1))
             self._retry_at = time.perf_counter() + delay
             print(f"[hop] retrying hop in {delay * 1e3:.0f} ms "
                   f"(attempt {self.attempts + 1}/{self.retries + 1})")
+            obs.event("hop.retry", attempt=self.attempts + 1,
+                      of=self.retries + 1, delay_ms=round(delay * 1e3, 1))
         else:
             self.failed = True
             print(f"[hop] giving up after {self.attempts} attempts; "
                   f"engine continues on {eng.cfg.name}")
+            obs.event("hop.giveup", attempts=self.attempts)
+        # every chaos path leaves a forensic trail (no-op without a dump dir)
+        obs.flight_dump(f"hop-{stage}")
 
     def _migrate_state(self, grown):
         self._chaos("cache-grow")
@@ -287,8 +318,12 @@ class HopController:
             self._fail("grow", err)
             return self.failed
         if buf is None:
-            if (time.perf_counter() - self._t_launch
-                    > self.watchdog.budget()):
+            elapsed = time.perf_counter() - self._t_launch
+            if elapsed > self.watchdog.budget():
+                obs.event("hop.watchdog_fire",
+                          budget_s=round(self.watchdog.budget(), 3),
+                          elapsed_s=round(elapsed, 3),
+                          attempt=self.attempts)
                 self._fail("grow", HopError(
                     f"watchdog: grow stage exceeded "
                     f"{self.watchdog.budget():.2f}s budget"))
@@ -298,14 +333,19 @@ class HopController:
         old_name = eng.cfg.name
         live = len(eng.live)
         try:
-            state, mode = self._migrate_state(buf)
+            with obs.span("hop.cache-grow", attempt=self.attempts,
+                          live=live) as sp_cache:
+                state, mode = self._migrate_state(buf)
+                sp_cache.attrs["mode"] = mode
         except (HopError, CacheGrowthError) as e:
             self._fail("cache-grow", e)
             return self.failed
         old = (eng.cfg, eng.params, eng.state)
         try:
-            self._chaos("swap")
-            eng.install(self.cfg2, buf, state)
+            with obs.span("hop.swap", attempt=self.attempts,
+                          src=old_name, dst=self.cfg2.name):
+                self._chaos("swap")
+                eng.install(self.cfg2, buf, state)
         except HopError as e:
             self._fail("swap", e)
             return self.failed
@@ -317,9 +357,16 @@ class HopController:
         self.cache_path = mode
         self.swap_at_step = eng.decode_steps
         self.hop_ms = (time.perf_counter() - self._t_begin) * 1e3
+        obs.histogram("hop.total_ms").observe(self.hop_ms)
+        obs.event("hop.complete", src=old_name, dst=self.cfg2.name,
+                  hop_ms=round(self.hop_ms, 1), cache=mode, live=live,
+                  attempt=self.attempts, of=self.retries + 1)
+        wd = self.watchdog
         print(f"[hop] hop complete: {old_name} -> {self.cfg2.name} in "
               f"{self.hop_ms:.1f} ms (cache: {mode}, {live} live sessions "
-              f"migrated, attempt {self.attempts}/{self.retries + 1})")
+              f"migrated, attempt {self.attempts}/{self.retries + 1}) | "
+              f"watchdog ewma {wd.ewma:.2f}s budget {wd.budget():.2f}s "
+              f"floor {wd.floor:.2f}s")
         if drafting:
             print(f"[spec] drafter resident: {old_name} drafts "
                   f"K={eng.spec_k} tokens/round for {self.cfg2.name} "

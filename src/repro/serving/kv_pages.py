@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 
 
@@ -81,6 +82,12 @@ class PageAllocator:
         self.peak_blocks = 0
         self.dirty = True                              # device table stale
         self._device_table = None
+        # pool-pressure gauges (host-side bookkeeping → host-side metrics)
+        self._g_in_use = obs.gauge("serve.kv.pool_in_use_blocks")
+        self._g_peak = obs.gauge("serve.kv.pool_peak_blocks")
+        obs.gauge("serve.kv.pool_total_blocks").set(self.n_blocks)
+        self._g_in_use.set(0)
+        self._g_peak.set(0)
 
     # -- accounting ---------------------------------------------------------
     def pages_for(self, length: int) -> int:
@@ -120,6 +127,8 @@ class PageAllocator:
             self.allocated[slot] += 1
             self.dirty = True
         self.peak_blocks = max(self.peak_blocks, self.in_use)
+        self._g_in_use.set(self.in_use)
+        self._g_peak.set(self.peak_blocks)
 
     def release(self, slot: int) -> None:
         for j in range(int(self.allocated[slot])):
@@ -128,6 +137,7 @@ class PageAllocator:
         self.allocated[slot] = 0
         self.reserved[slot] = 0
         self.dirty = True
+        self._g_in_use.set(self.in_use)
 
     # -- device view --------------------------------------------------------
     def device_table(self) -> jax.Array:

@@ -47,6 +47,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.model import decode_step
+from repro.obs import counter_group
+
+# Program (re)builds per kind — lru_cache hits don't count, so a hop cycle
+# that recompiles its draft/verify programs shows up here.
+BUILD_COUNTS = counter_group("serve.spec.builds")
 
 _TINY = 1e-20
 
@@ -122,6 +127,7 @@ def make_draft_fn(cfg: ModelConfig, K: int):
     across on the next round whenever the verifier accepted everything.
     The extra step's output token is discarded; its cache write is the
     point."""
+    BUILD_COUNTS.inc("draft")
 
     @jax.jit
     def draft(params, state, last):
@@ -149,6 +155,7 @@ def make_sampled_draft_fn(cfg: ModelConfig, K: int, temperature: float,
     Scans K+1 steps for K drafts for the same cache-completeness reason as
     :func:`make_draft_fn`; callers pass K+1 key rows (the last draw is
     discarded with its token)."""
+    BUILD_COUNTS.inc("sampled_draft")
 
     @jax.jit
     def draft(params, state, last, keys):        # keys: (K+1, B, 2) uint32
@@ -186,6 +193,7 @@ def make_verify_fn(cfg: ModelConfig, K1: int, want_hidden: bool):
 
     Returns (logits (B,K1,V)[, prenorm hidden (B,K1,D)], state).
     """
+    BUILD_COUNTS.inc("verify")
 
     @jax.jit
     def verify(params, state, inputs):                # inputs: (B, K1)

@@ -59,6 +59,14 @@ mesh, since restore shardings are rebuilt from the stage's own template. A
 post-growth snapshot at every stage entry means a finished hop (including
 its LiGO SGD phase) is never recomputed.
 
+The runner traces every stage leg through :mod:`repro.obs`: the train leg
+runs under a ``traj.train`` span (attrs: stage, arch, resume step) and each
+hop under ``traj.grow`` (attrs: stage, src/dst arch), with per-stage wall
+histograms ``traj.stage.train_ms`` / ``traj.stage.grow_ms`` — so
+``--obs-log``/``--obs-report`` on ``launch.train`` reconstruct where a
+trajectory's wall clock went without touching the timing dict the result
+already carries.
+
 Optimizer-state semantics per method
 ------------------------------------
 Every hop grows the AdamW state through the same operator as the weights

@@ -53,7 +53,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro import compat
+from repro import compat, obs
 from repro.autogrow import Telemetry, make_policy, probe_methods
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import TrainConfig
@@ -312,6 +312,11 @@ class TrajectoryRunner:
         def timing(s: int) -> Dict[str, float]:
             return timings.setdefault(s, {"train_ms": 0.0, "grow_ms": 0.0})
 
+        # per-stage walls also land in the obs registry (spans "traj.train"
+        # / "traj.grow" carry the same walls in the flight recorder)
+        h_train = obs.histogram("traj.stage.train_ms")
+        h_grow = obs.histogram("traj.stage.grow_ms")
+
         # the identity of the last checkpoint written (or restored from),
         # so stage-end/done saves don't rewrite the step the periodic
         # in-loop save just flushed
@@ -349,43 +354,48 @@ class TrajectoryRunner:
                           f"steps [{k}, "
                           f"{'auto<=' if st.auto else ''}{st.budget})")
                 t_train = time.perf_counter()
-                jstep, loader, psh, osh = self._stage_step_fn(stage, params)
-                if psh is not None:
-                    params = jax.tree.map(jax.device_put, params, psh)
-                    opt = jax.tree.map(jax.device_put, opt, osh)
-                while k < st.budget:
-                    if pol is not None and pol.should_grow(k, tele):
-                        self.decisions.append(
-                            {"stage": stage, "stage_step": k,
-                             "global_step": global_step,
-                             "kind": st.policy.kind,
-                             "why": pol.why(k, tele)})
-                        self._log(f"stage {stage + 1} policy fired at step "
-                                  f"{k}: {pol.why(k, tele)}")
-                        break
-                    if max_steps is not None and global_step >= max_steps:
-                        timing(stage)["train_ms"] += (time.perf_counter()
-                                                      - t_train) * 1e3
-                        save_once(stage, k, global_step, tele=tele,
-                                  block=True)
-                        self._log(f"paused at global step {global_step} "
-                                  f"(stage {stage} step {k})")
-                        return result("paused")
-                    batch = loader.batch_at(k)
-                    params, opt, m = jstep(params, opt, batch,
-                                           jnp.asarray(k))
-                    k += 1
-                    global_step += 1
-                    loss = float(m["total"])
-                    history.append((global_step, stage, loss))
-                    if tele is not None:
-                        tele.record(global_step, loss)
-                    if on_metrics is not None:
-                        on_metrics(global_step, stage, m)
-                    if k % self.traj.checkpoint_every == 0:
-                        save(stage, k, global_step, tele=tele)
-                timing(stage)["train_ms"] += (time.perf_counter()
-                                              - t_train) * 1e3
+                with obs.span("traj.train", stage=stage,
+                              arch=st.cfg.name, start=k):
+                    jstep, loader, psh, osh = self._stage_step_fn(stage,
+                                                                  params)
+                    if psh is not None:
+                        params = jax.tree.map(jax.device_put, params, psh)
+                        opt = jax.tree.map(jax.device_put, opt, osh)
+                    while k < st.budget:
+                        if pol is not None and pol.should_grow(k, tele):
+                            self.decisions.append(
+                                {"stage": stage, "stage_step": k,
+                                 "global_step": global_step,
+                                 "kind": st.policy.kind,
+                                 "why": pol.why(k, tele)})
+                            self._log(f"stage {stage + 1} policy fired at "
+                                      f"step {k}: {pol.why(k, tele)}")
+                            break
+                        if max_steps is not None and global_step >= max_steps:
+                            dt = (time.perf_counter() - t_train) * 1e3
+                            timing(stage)["train_ms"] += dt
+                            h_train.observe(dt)
+                            save_once(stage, k, global_step, tele=tele,
+                                      block=True)
+                            self._log(f"paused at global step {global_step} "
+                                      f"(stage {stage} step {k})")
+                            return result("paused")
+                        batch = loader.batch_at(k)
+                        params, opt, m = jstep(params, opt, batch,
+                                               jnp.asarray(k))
+                        k += 1
+                        global_step += 1
+                        loss = float(m["total"])
+                        history.append((global_step, stage, loss))
+                        if tele is not None:
+                            tele.record(global_step, loss)
+                        if on_metrics is not None:
+                            on_metrics(global_step, stage, m)
+                        if k % self.traj.checkpoint_every == 0:
+                            save(stage, k, global_step, tele=tele)
+                    dt = (time.perf_counter() - t_train) * 1e3
+                    timing(stage)["train_ms"] += dt
+                    h_train.observe(dt)
                 # the stage-end save: a kill during the following hop
                 # resumes here (the hop's own LiGO-phase checkpoints carry
                 # the intra-hop progress)
@@ -414,9 +424,12 @@ class TrajectoryRunner:
                      "picked": method, "scores": scores})
                 self._log(f"probe picked method={method} "
                           f"({', '.join(f'{m}={s:.4f}' for m, s in sorted(scores.items()))})")
-            stage, params, opt, grow_ms = self._grow_into(
-                stage + 1, params, opt, method=method)
+            with obs.span("traj.grow", stage=stage + 1,
+                          src=st.cfg.name, dst=nxt.cfg.name):
+                stage, params, opt, grow_ms = self._grow_into(
+                    stage + 1, params, opt, method=method)
             timing(stage)["grow_ms"] = grow_ms
+            h_grow.observe(grow_ms)
             k = 0
             # post-growth snapshot (same global step, new stage meta):
             # replaces the stage-end save, so a restart never redoes the hop

@@ -1,0 +1,457 @@
+"""Observability layer: tracer, metrics registry, exporters, and the hop
+flight recorder.
+
+The load-bearing cases: bucket-reconstructed histogram percentiles match a
+NumPy oracle within one bucket width; the CounterGroup keeps the
+``collections.Counter`` test API the kernel/trace counters always had; and
+a chaos-injected hop leaves a parseable JSONL flight-recorder dump whose
+span/event sequence reconstructs the stage/retry/rollback story with
+per-stage wall times.
+"""
+import json
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs.paper_models import BERT_SMALL
+from repro.core.ligo import init_ligo_params
+from repro.core.plan import plan_for
+from repro.models import init_params
+from repro.obs.trace import FLIGHT
+from repro.serving import HopController, HopWatchdog, ServingEngine
+
+TINY = BERT_SMALL.scaled(
+    name="srv-tiny", n_layers=2, d_model=32, n_heads=4, n_kv_heads=4,
+    d_head=8, d_ff=64, vocab_size=64, max_seq=64, dtype="float32",
+    objective="clm", encoder_only=False, causal=True)
+BIG = TINY.scaled(name="srv-big", n_layers=4, d_model=48, d_head=12,
+                  d_ff=96)
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Each test sees an enabled tracer, an empty ring, zeroed metric
+    values (handles stay attached), and no auto-dump directory."""
+    obs.set_enabled(True)
+    obs.set_dump_dir(None)
+    FLIGHT.clear()
+    obs.REGISTRY.reset()
+    yield
+    obs.close_jsonl()
+    obs.set_enabled(True)
+    obs.set_dump_dir(None)
+    FLIGHT.clear()
+    obs.REGISTRY.reset()
+
+
+# ---------------------------------------------------------------------------
+# Tracer + flight recorder
+# ---------------------------------------------------------------------------
+def test_span_nesting_parent_child():
+    with obs.span("outer", kind="a") as so:
+        with obs.span("inner") as si:
+            si.attrs["found"] = 42
+    spans = {e["name"]: e for e in FLIGHT.events(type="span")}
+    assert spans["inner"]["parent_id"] == spans["outer"]["span_id"]
+    assert spans["outer"]["parent_id"] is None
+    assert spans["inner"]["attrs"]["found"] == 42
+    assert spans["outer"]["attrs"] == {"kind": "a"}
+    assert spans["outer"]["dur_ms"] >= spans["inner"]["dur_ms"] >= 0
+    assert so.dur_ms == spans["outer"]["dur_ms"]
+
+
+def test_span_records_error_and_reraises():
+    with pytest.raises(ValueError, match="boom"):
+        with obs.span("failing"):
+            raise ValueError("boom")
+    (ev,) = FLIGHT.events(type="span")
+    assert "boom" in ev["error"]
+
+
+def test_span_stacks_are_per_thread():
+    done = threading.Barrier(2)
+
+    def work(tag):
+        with obs.span(f"root-{tag}"):
+            done.wait(timeout=10)      # both roots open simultaneously
+            with obs.span(f"leaf-{tag}"):
+                pass
+
+    ts = [threading.Thread(target=work, args=(i,)) for i in range(2)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    spans = {e["name"]: e for e in FLIGHT.events(type="span")}
+    for i in range(2):
+        # each leaf parents to its own thread's root, never the other's
+        assert spans[f"leaf-{i}"]["parent_id"] == \
+            spans[f"root-{i}"]["span_id"]
+
+
+def test_event_records_point_marker():
+    obs.event("hop.rollback", stage="swap", attempt=1)
+    (ev,) = FLIGHT.events(type="event")
+    assert ev["name"] == "hop.rollback"
+    assert ev["attrs"] == {"stage": "swap", "attempt": 1}
+    assert "dur_ms" not in ev
+
+
+def test_flight_recorder_ring_is_bounded():
+    rec = obs.FlightRecorder(capacity=8)
+    for i in range(20):
+        rec.record({"type": "event", "name": f"e{i}"})
+    evs = rec.events()
+    assert len(evs) == 8
+    assert evs[0]["name"] == "e12" and evs[-1]["name"] == "e19"
+
+
+def test_dump_and_flight_dump(tmp_path):
+    with obs.span("hop.grow", gen=1):
+        pass
+    path = FLIGHT.dump(str(tmp_path / "ring.jsonl"), reason="manual")
+    lines = [json.loads(l) for l in open(path)]
+    assert lines[0]["type"] == "dump" and lines[0]["reason"] == "manual"
+    assert any(e.get("name") == "hop.grow" for e in lines[1:])
+
+    # no dump dir configured -> no-op; configured -> sequence-named file
+    assert obs.flight_dump("why") is None
+    obs.set_dump_dir(str(tmp_path))
+    p = obs.flight_dump("hop-grow")
+    assert p is not None and "hop-grow" in p
+    evs = [json.loads(l) for l in open(p)]
+    assert evs[0]["type"] == "dump"
+    # the dump records why it happened as the ring's last event
+    assert evs[-1]["name"] == "obs.dump"
+    assert evs[-1]["attrs"]["reason"] == "hop-grow"
+
+
+def test_disabled_mode_records_nothing():
+    h = obs.histogram("t.dis_ms")
+    g = obs.gauge("t.dis_g")
+    c = obs.counter("t.dis_c")
+    obs.set_enabled(False)
+    with obs.span("invisible") as sp:
+        sp.attrs["x"] = 1              # writable no-op span
+    obs.event("invisible.event")
+    h.observe(5.0)
+    g.set(3.0)
+    c.inc()
+    assert FLIGHT.events() == []
+    assert h.count == 0 and g.value is None and c.value == 0
+    obs.set_enabled(True)
+    h.observe(5.0)
+    assert h.count == 1
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+def test_counter_and_gauge_basics():
+    c = obs.counter("t.c")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    g = obs.gauge("t.g")
+    assert g.value is None
+    g.set(2.5)
+    assert g.value == 2.5
+    assert obs.counter("t.c") is c          # get-or-create returns the same
+
+
+def test_registry_type_mismatch_is_error():
+    obs.counter("t.typed")
+    with pytest.raises(TypeError):
+        obs.histogram("t.typed")
+
+
+def test_registry_reset_zeroes_in_place():
+    c = obs.counter("t.reset")
+    c.inc(3)
+    obs.REGISTRY.reset()
+    assert c.value == 0                     # held handle stays attached
+    c.inc()
+    assert obs.counter("t.reset").value == 1
+
+
+def test_counter_group_keeps_counter_api():
+    """The exact idioms the kernel/plan tests use against LAUNCH_COUNTS /
+    TRACE_COUNTS must survive the thread-safe migration."""
+    g = obs.counter_group("t.group")
+    g.clear()
+    assert g["missing"] == 0                # missing key reads 0
+    g.inc("fwd")
+    g.inc("fwd")
+    g.inc("bwd", 3)
+    assert g["fwd"] == 2 and g["bwd"] == 3
+    assert dict(g) == {"fwd": 2, "bwd": 3}
+    assert sorted(g.keys()) == ["bwd", "fwd"]
+    assert "fwd" in g and len(g) == 2
+    g["fwd"] = 7
+    assert g["fwd"] == 7
+    g.clear()
+    assert dict(g) == {} and g["fwd"] == 0
+
+
+def test_counter_group_is_thread_safe():
+    g = obs.counter_group("t.race")
+
+    def spin():
+        for _ in range(2000):
+            g.inc("k")
+
+    ts = [threading.Thread(target=spin) for _ in range(4)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert g["k"] == 8000                   # += on a dict would lose some
+
+
+@pytest.mark.parametrize("dist", ["uniform", "lognormal", "bimodal"])
+def test_histogram_percentiles_match_numpy_within_bucket(dist):
+    rng = np.random.RandomState(0)
+    if dist == "uniform":
+        data = rng.uniform(0.0, 50.0, 4000)
+    elif dist == "lognormal":
+        data = np.minimum(rng.lognormal(1.5, 0.7, 4000), 49.9)
+    else:
+        data = np.concatenate([rng.normal(5, 1, 2000),
+                               rng.normal(40, 2, 2000)])
+        data = np.clip(data, 0.0, 49.9)
+    width = 1.0
+    h = obs.histogram(f"t.h_{dist}",
+                      buckets=tuple(width * i for i in range(1, 51)))
+    for v in data:
+        h.observe(v)
+    assert h.count == len(data)
+    for q in (1, 10, 50, 90, 99, 99.9):
+        est = h.percentile(q)
+        # interpolation conventions differ by up to one rank, so bracket
+        # with the lower/higher order statistics and allow a bucket width
+        lo_o = float(np.percentile(data, q, method="lower"))
+        hi_o = float(np.percentile(data, q, method="higher"))
+        assert lo_o - width - 1e-9 <= est <= hi_o + width + 1e-9, \
+            (q, est, lo_o, hi_o)
+
+
+def test_histogram_edge_cases():
+    h = obs.histogram("t.h_edge", buckets=(1.0, 2.0, 4.0))
+    assert h.percentile(50) is None
+    h.observe(3.0)
+    assert h.percentile(0) == h.percentile(100) == 3.0
+    h.observe(100.0)                         # overflow bucket, clamps to max
+    assert h.percentile(99) <= 100.0
+    snap = h.snapshot()
+    assert snap["count"] == 2 and snap["max"] == 100.0
+    assert sum(snap["counts"]) == 2
+    with pytest.raises(ValueError):
+        obs.Histogram("bad", buckets=(2.0, 1.0))
+    with pytest.raises(ValueError):
+        obs.Histogram("bad", buckets=(1.0, float("inf")))
+
+
+def test_histogram_observe_is_thread_safe():
+    h = obs.histogram("t.h_race", buckets=(10.0,))
+
+    def spin():
+        for _ in range(2000):
+            h.observe(1.0)
+
+    ts = [threading.Thread(target=spin) for _ in range(4)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert h.count == 8000 and h.sum == 8000.0
+
+
+# ---------------------------------------------------------------------------
+# Exporters
+# ---------------------------------------------------------------------------
+def test_prom_render_formats():
+    obs.counter("t.hits").inc(3)
+    obs.gauge("t.depth").set(1.5)
+    g = obs.counter_group("t.launches")
+    g.inc("fwd", 2)
+    h = obs.histogram("t.lat_ms", buckets=(1.0, 5.0))
+    h.observe(0.5)
+    h.observe(3.0)
+    h.observe(100.0)
+    text = obs.prom.render()
+    assert "t_hits_total 3" in text
+    assert "t_depth 1.5" in text
+    assert 't_launches_total{key="fwd"} 2' in text
+    # cumulative buckets + implicit +Inf
+    assert 't_lat_ms_bucket{le="1"} 1' in text
+    assert 't_lat_ms_bucket{le="5"} 2' in text
+    assert 't_lat_ms_bucket{le="+Inf"} 3' in text
+    assert "t_lat_ms_count 3" in text
+
+
+def test_jsonl_stream_and_metric_snapshot(tmp_path):
+    path = str(tmp_path / "obs.jsonl")
+    obs.attach_jsonl(path)
+    with obs.span("hop.grow", gen=1):
+        pass
+    obs.counter_group("serve.requests").inc("dropped", 0)
+    obs.histogram("t.step_ms").observe(2.0)
+    assert obs.close_jsonl() == path
+    lines = [json.loads(l) for l in open(path)]
+    assert lines[0]["event"] == "obs-log-open"
+    assert lines[-1]["event"] == "obs-log-close"
+    assert any(e.get("type") == "span" and e["name"] == "hop.grow"
+               for e in lines)
+    metrics = {e["name"]: e for e in lines if e.get("type") == "metric"}
+    # counter groups flatten to grep-able per-key lines
+    assert metrics["serve.requests.dropped"]["value"] == 0
+    assert metrics["t.step_ms"]["count"] == 1
+    # double-attach is an error; re-attach after close works
+    obs.attach_jsonl(str(tmp_path / "second.jsonl"))
+    with pytest.raises(RuntimeError):
+        obs.attach_jsonl(str(tmp_path / "third.jsonl"))
+    obs.close_jsonl()
+
+
+def test_report_renders_known_sections():
+    obs.histogram("serve.decode.step_ms").observe(1.0)
+    obs.counter_group("serve.requests").inc("dropped", 0)
+    HopWatchdog(timeout=10.0).publish()
+    text = obs.report()
+    assert "decode step" in text
+    assert "dropped=0" in text
+    assert "watchdog" in text
+
+
+def test_profile_noop_without_dir():
+    with obs.profile(None):
+        pass                                 # must not touch jax.profiler
+
+
+# ---------------------------------------------------------------------------
+# Integration: watchdog gauges, engine metrics, chaos-hop flight dump
+# ---------------------------------------------------------------------------
+def test_watchdog_publishes_gauges():
+    wd = HopWatchdog(timeout=60.0)
+    wd.seed(2.0)
+    assert obs.gauge("hop.watchdog.ewma_s").value == 2.0
+    assert obs.gauge("hop.watchdog.floor_s").value == 2.0
+    assert obs.gauge("hop.watchdog.budget_s").value == wd.budget()
+    wd.observe(4.0)
+    assert obs.gauge("hop.watchdog.ewma_s").value == pytest.approx(3.0)
+
+
+@pytest.fixture(scope="module")
+def small_params():
+    return init_params(TINY, jax.random.PRNGKey(0))
+
+
+def _run_engine(params, n_req=3, gen=6):
+    eng = ServingEngine(params, TINY, slots=2, prompt_budget=8,
+                        gen_budget=gen)
+    rng = np.random.RandomState(0)
+    for i in range(n_req):
+        eng.submit(list(rng.randint(0, TINY.vocab_size, 4 + i % 3)),
+                   max_new=gen)
+    eng.run()
+    return eng
+
+
+def test_engine_metrics_and_step_times_shim(small_params):
+    eng = _run_engine(small_params)
+    with pytest.warns(DeprecationWarning):
+        times = eng.step_times_ms
+    assert len(times) == eng.decode_steps > 0
+    h = obs.REGISTRY.get("serve.decode.step_ms")
+    assert h.count == eng.decode_steps
+    p50, p99 = eng.decode_step_percentiles(50, 99)
+    assert 0 < p50 <= p99
+    reqs = obs.counter_group("serve.requests")
+    assert reqs["submitted"] == reqs["done"] == 3
+    assert reqs["dropped"] == 0
+    assert obs.REGISTRY.get("serve.request.ttft_ms").count == 3
+    assert obs.REGISTRY.get("serve.request.tokens_per_s").count == 3
+    # paged-pool gauges tracked allocation and drained back to zero
+    assert obs.gauge("serve.kv.pool_in_use_blocks").value == 0
+    assert obs.gauge("serve.kv.pool_peak_blocks").value > 0
+    # prefills leave one span per admitted request
+    assert len(FLIGHT.events(type="span", prefix="serve.prefill")) == 3
+
+
+@pytest.mark.parametrize("stage", ["grow", "cache-grow", "swap", "hang"])
+def test_chaos_hop_leaves_parseable_flight_dump(tmp_path, small_params,
+                                                stage):
+    """--fail-at-hop at each stage: the rollback auto-dumps the ring, the
+    dump parses, and its sequence tells the stage/retry/rollback story;
+    the post-retry ring reconstructs grow→cache-grow→swap with walls."""
+    obs.set_dump_dir(str(tmp_path))
+    op = init_ligo_params(jax.random.PRNGKey(7), TINY, BIG)
+    plan_for(TINY, BIG, small_params).executor(mesh=None)(op, small_params)
+
+    eng = ServingEngine(small_params, TINY, slots=2, prompt_budget=8,
+                        gen_budget=16)
+    rng = np.random.RandomState(0)
+    for i in range(4):
+        eng.submit(list(rng.randint(0, TINY.vocab_size, 4 + i % 4)),
+                   max_new=16)
+    hop = HopController(eng, BIG, op, fail_at=stage, retries=2,
+                        backoff=0.01,
+                        background=(stage == "hang"),
+                        timeout=(0.5 if stage == "hang" else 120.0))
+
+    def on_step(e):
+        if e.decode_steps >= 2 and hop.attempts == 0:
+            hop.begin()
+        if hop.attempts:
+            hop.poll()
+
+    eng.run(on_step=on_step)
+    while not hop.poll():
+        pass
+    assert hop.completed and hop.attempts == 2
+    assert eng.counts()["dropped"] == 0
+
+    dumps = sorted(tmp_path.glob("flightrec-*.jsonl"))
+    assert len(dumps) == 1, "exactly one rollback -> exactly one dump"
+    evs = [json.loads(l) for l in open(dumps[0])]
+    assert evs[0]["type"] == "dump"
+
+    failed_stage = "grow" if stage == "hang" else stage
+    rollbacks = [e for e in evs if e.get("name") == "hop.rollback"]
+    assert len(rollbacks) == 1
+    rb = rollbacks[0]["attrs"]
+    assert rb["stage"] == failed_stage
+    assert rb["attempt"] == 1 and rb["dropped"] == 0
+    if stage == "hang":
+        assert "watchdog" in rb["cause"]
+        assert any(e.get("name") == "hop.watchdog_fire" for e in evs)
+    retries = [e for e in evs if e.get("name") == "hop.retry"]
+    assert len(retries) == 1 and retries[0]["attrs"]["attempt"] == 2
+    # the dump shows how far attempt 1 got: spans for every stage *before*
+    # the failure succeed, the failing stage (if it ran as a span) errors
+    begin = next(e for e in evs if e.get("name") == "hop.begin")
+    a1 = [e for e in evs if e.get("type") == "span"
+          and e.get("attrs", {}).get("attempt") == 1
+          and e["name"].startswith("hop.")]
+    by_name = {e["name"]: e for e in a1}
+    if stage in ("grow",):
+        assert "error" in by_name["hop.grow"]
+    if stage == "cache-grow":
+        assert "error" not in by_name["hop.grow"]
+        assert "error" in by_name["hop.cache-grow"]
+    if stage == "swap":
+        assert "error" not in by_name["hop.cache-grow"]
+        assert "error" in by_name["hop.swap"]
+    assert all(e["t_ms"] >= begin["t_ms"] for e in a1)
+
+    # after the retry, the live ring reconstructs the full successful
+    # sequence with per-stage wall times
+    ring = FLIGHT.events()
+    a2 = {e["name"]: e for e in ring if e.get("type") == "span"
+          and e.get("attrs", {}).get("attempt") == 2}
+    for name in ("hop.grow", "hop.cache-grow", "hop.swap"):
+        assert name in a2 and "error" not in a2[name]
+        assert a2[name]["dur_ms"] >= 0
+    assert (a2["hop.grow"]["t_ms"] <= a2["hop.cache-grow"]["t_ms"]
+            <= a2["hop.swap"]["t_ms"])
+    assert a2["hop.cache-grow"]["attrs"]["mode"] == "reprefill"
+    completes = [e for e in ring if e.get("name") == "hop.complete"]
+    assert len(completes) == 1
+    assert completes[0]["attrs"]["attempt"] == 2
