@@ -1011,6 +1011,75 @@ def _bench_obs_overhead(entries: List[Dict], speedups: Dict,
     speedups["obs_overhead"] = ratios
 
 
+def _bench_ledger_overhead(entries: List[Dict], speedups: Dict,
+                           rounds: int = 4, steps: int = 24) -> None:
+    """The ledger hard budget: one ``record_step`` per optimiser step (a
+    compact-json append to a buffered file handle + two gauge sets + two
+    histogram observes) must cost <=2% of a proxy train step. Same paired
+    sampling as ``_bench_obs_overhead``: the record toggles per *step*, so
+    neighbouring on/off samples see identical box load, and the compile is
+    hoisted (the ledger never lives inside jit — the measured-cost pass
+    runs at compile time, off the step path entirely)."""
+    import tempfile
+
+    from repro.configs.base import TrainConfig
+    from repro.data import batch_for_step
+    from repro.models import init_params
+    from repro.obs.ledger import RunLedger
+    from repro.optim import adamw_init
+    from repro.roofline import train_flops_per_step
+    from repro.training import make_train_step
+
+    cfg = PROXY_SMALL
+    B, S = 8, 32
+    tcfg = TrainConfig(steps=steps, warmup_steps=4, lr=1e-3,
+                       seq_len=S, global_batch=B)
+    jstep = jax.jit(make_train_step(cfg, tcfg))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    batches = [{k: jnp.asarray(v)
+                for k, v in batch_for_step(cfg, i, B, S, seed=0).items()}
+               for i in range(4)]
+    params, opt, _ = jstep(params, opt, batches[0], jnp.asarray(0))  # warm
+    fps = train_flops_per_step(cfg, B, S)
+
+    walls: Dict[bool, List[float]] = {True: [], False: []}
+    with tempfile.TemporaryDirectory() as d:
+        led = RunLedger(os.path.join(d, "bench.jsonl"), run_id="bench")
+        led.restore(None)
+        step = 0
+        for r in range(rounds):
+            for i in range(steps):
+                on = (i + r) % 2 == 0
+                t0 = time.perf_counter()
+                params, opt, m = jstep(params, opt, batches[i % 4],
+                                       jnp.asarray(step))
+                loss = float(m["total"])       # host sync, both variants
+                if on:
+                    led.record_step(stage=0, arch=cfg.name, step=step,
+                                    loss=loss, tokens=float(B * S),
+                                    wall_ms=0.0, flops_modelled=fps,
+                                    flops_measured=fps)
+                walls[on].append(time.perf_counter() - t0)
+                step += 1
+        led.close()
+
+    on_ms = min(walls[True]) * 1e3
+    off_ms = min(walls[False]) * 1e3
+    note = (f"proxy train step ({B}x{S}) + one ledger record_step "
+            f"(json append + gauges + histograms), toggled per step")
+    entries.extend([
+        {"name": "ledger_overhead[train_step]/enabled",
+         "wall_ms": round(on_ms, 3), "est_hbm_bytes": None,
+         "note": f"{note}; record live (best of {rounds * steps // 2})"},
+        {"name": "ledger_overhead[train_step]/disabled",
+         "wall_ms": round(off_ms, 3), "est_hbm_bytes": None,
+         "note": f"{note}; record skipped (best of {rounds * steps // 2})"},
+    ])
+    speedups["ledger_overhead"] = {
+        "train_step_ratio": round(on_ms / off_ms, 4)}
+
+
 def engine_bench(quick: bool = False, out_path: Optional[str] = None) -> Dict:
     """Time plan vs legacy apply_ligo + a train_ligo step; write
     BENCH_growth.json. ``quick`` skips the full-size BERT pair."""
@@ -1034,6 +1103,7 @@ def engine_bench(quick: bool = False, out_path: Optional[str] = None) -> Dict:
     _bench_autogrow(entries, speedups,
                     decisions=1000 if quick else 5000)
     _bench_obs_overhead(entries, speedups, rounds=3 if quick else 5)
+    _bench_ledger_overhead(entries, speedups, rounds=3 if quick else 4)
     out = {
         "backend": jax.default_backend(),
         "pallas_leg": "excluded on CPU (interpret mode is not a timing "

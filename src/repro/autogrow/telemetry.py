@@ -62,6 +62,19 @@ class Telemetry:
         self._g_flops = obs.gauge("autogrow.cum_flops")
 
     # ------------------------------------------------------------------
+    def set_flops_per_step(self, flops_per_step: float) -> None:
+        """Switch the per-step FLOPs increment — e.g. to the measured
+        number the compile-time cost pass (:mod:`repro.obs.costs`) read
+        back from the compiled train step.
+
+        Replay determinism survives the switch: ``cum_flops`` already
+        accumulated is untouched, :meth:`snapshot`/:meth:`restore` carry
+        it verbatim, and a resumed run re-measures the same compiled
+        program (same number) before recording its first step — so the
+        resumed stream is identical to the uninterrupted one.
+        """
+        self.flops_per_step = float(flops_per_step)
+
     def record(self, step: int, loss: float) -> None:
         loss = float(loss)
         self._ema = (loss if self._ema is None

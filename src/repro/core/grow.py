@@ -75,7 +75,9 @@ def train_ligo(ligo, small_params, cfg1: ModelConfig, cfg2: ModelConfig,
                scan_chunk: int = 0, phase_ckpt=None,
                phase_meta: Optional[Dict] = None,
                checkpoint_every_chunks: int = 1,
-               fail_at: Optional[int] = None) -> Tuple[Dict, list]:
+               fail_at: Optional[int] = None,
+               ledger=None,
+               ledger_ctx: Optional[Dict] = None) -> Tuple[Dict, list]:
     """The ~100-step SGD phase optimising only the LiGO parameters.
 
     The phase runs as chunks of ``scan_chunk`` steps: each chunk prefetches
@@ -107,6 +109,19 @@ def train_ligo(ligo, small_params, cfg1: ModelConfig, cfg2: ModelConfig,
     ``>= fail_at`` (checkpoint durably written first), the phase raises —
     the deterministic mid-phase "kill" used by the tests and the CI
     kill+resume smoke.
+
+    **Ledger** (``ledger``, a :class:`repro.obs.ledger.RunLedger`): every
+    LiGO step lands as a ``phase="ligo"`` step record — loss from the
+    scanned chunk, FLOPs from the compile-time measured-cost pass over
+    the chunk program (the trip-count-corrected read-back of the scan
+    body; modelled ``6·N₂·B·S`` otherwise). On an elastic resume the
+    already-run steps are *re-emitted* from the phase checkpoint's saved
+    losses (their original walls are gone, so ``wall_ms`` is 0 — the one
+    field the ledger identity contract excludes), so the resumed ledger
+    is record-for-record identical to an uninterrupted run as long as
+    the resume lands on a chunk boundary of the same chunk size (the
+    elastic contract). ``ledger_ctx`` carries ``{"stage", "n_devices"}``
+    from the trajectory runner.
     """
     grad_fn = jax.value_and_grad(
         partial(ligo_loss, cfg1=cfg1, cfg2=cfg2, loss_chunk=loss_chunk,
@@ -171,8 +186,57 @@ def train_ligo(ligo, small_params, cfg1: ModelConfig, cfg2: ModelConfig,
             ligo = jax.tree.map(jnp.array, ligo)
             mom = jax.tree.map(jnp.array, mom)
 
+    peek = None
     for _ in range(start):          # deterministic resume: skip spent batches
-        next(data_it)
+        b = next(data_it)
+        if peek is None:
+            peek = b                # shape witness for the measured pass
+
+    # ---- compute ledger: measured-cost pass + per-step records ----------
+    led_stage = int((ledger_ctx or {}).get("stage", 0))
+    led_nd = int((ledger_ctx or {}).get("n_devices", 1))
+    led_state = {"tokens": None, "fps_model": None, "meas_fps": None}
+
+    def _ledger_prepare(batch_tree, n_chunk: int) -> None:
+        """Model + (when jitted) measure the chunk program, once per phase.
+        ``batch_tree`` is one un-stacked batch; lowering only needs shapes,
+        so the resume path reuses a discarded batch as the witness."""
+        from repro.roofline import train_flops_per_step
+        leaf = batch_tree.get("tokens") if isinstance(batch_tree, dict) \
+            else None
+        if leaf is None:
+            leaf = max(jax.tree.leaves(batch_tree), key=lambda x: x.ndim)
+        bsz, seq = int(leaf.shape[0]), int(leaf.shape[1])
+        led_state["tokens"] = float(bsz * seq)
+        led_state["fps_model"] = train_flops_per_step(cfg2, bsz, seq)
+        if jit and n_chunk > 0:
+            from repro.obs import costs
+            stacked = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct((n_chunk,) + x.shape,
+                                               x.dtype), batch_tree)
+            m = costs.measure_jitted(
+                f"ligo_chunk[{cfg2.name}]", run_chunk, ligo, mom, stacked,
+                modelled_flops=led_state["fps_model"] * n_chunk,
+                n_devices=led_nd, per_call_units=n_chunk)
+            if m is not None:
+                led_state["meas_fps"] = m["flops_per_unit"]
+
+    def _ledger_steps(first_step: int, step_losses, wall_ms_each: float
+                      ) -> None:
+        for j, lv in enumerate(step_losses):
+            ledger.record_step(
+                phase="ligo", stage=led_stage, arch=cfg2.name,
+                step=first_step + j, loss=lv, tokens=led_state["tokens"],
+                wall_ms=wall_ms_each,
+                flops_modelled=led_state["fps_model"],
+                flops_measured=led_state["meas_fps"])
+
+    if ledger is not None and start > 0:
+        # the runner truncated the ledger to the last *trajectory*
+        # checkpoint (which predates this hop); rebuild the already-run
+        # phase records from the phase checkpoint's losses
+        _ledger_prepare(peek, min(chunk, steps - start))
+        _ledger_steps(0, losses, 0.0)
 
     done = start
     chunks_done = 0
@@ -183,10 +247,16 @@ def train_ligo(ligo, small_params, cfg1: ModelConfig, cfg2: ModelConfig,
         # host-boundary timing: float(l) on the losses forces the sync, so
         # the span wall covers the whole compiled chunk, never intrudes on it
         with obs.span("ligo.chunk", start=done, n=n) as sp_chunk:
-            batches = _stack_batches([next(data_it) for _ in range(n)])
+            raw = [next(data_it) for _ in range(n)]
+            if ledger is not None and led_state["tokens"] is None:
+                _ledger_prepare(raw[0], n)
+            batches = _stack_batches(raw)
             ligo, mom, chunk_losses = run_chunk(ligo, mom, batches)
-            losses.extend(float(l) for l in chunk_losses)
+            chunk_losses = [float(l) for l in chunk_losses]
+            losses.extend(chunk_losses)
         h_chunk.observe(sp_chunk.dur_ms or 0.0)
+        if ledger is not None:
+            _ledger_steps(done, chunk_losses, (sp_chunk.dur_ms or 0.0) / n)
         done += n
         chunks_done += 1
         failing = fail_at is not None and fail_at <= done < steps
@@ -263,6 +333,7 @@ def grow(small_params, cfg1: ModelConfig, cfg2: ModelConfig, *,
          apply: bool = True, ligo_ckpt=None,
          ligo_meta: Optional[Dict] = None, ligo_scan_chunk: int = 0,
          ligo_fail_at: Optional[int] = None,
+         ligo_ledger=None, ligo_ledger_ctx: Optional[Dict] = None,
          ) -> Tuple[Optional[Dict], Dict[str, Any]]:
     """Grow Θ_small → Θ_large. Returns (big_params, info).
 
@@ -283,7 +354,9 @@ def grow(small_params, cfg1: ModelConfig, cfg2: ModelConfig, *,
 
     ``ligo_ckpt``/``ligo_meta``/``ligo_scan_chunk``/``ligo_fail_at`` make
     the LiGO phase elastic — threaded straight into :func:`train_ligo`'s
-    phase-checkpointing (see its docstring).
+    phase-checkpointing (see its docstring) — and
+    ``ligo_ledger``/``ligo_ledger_ctx`` give the phase's per-step records
+    to the compute ledger the same way.
     """
     key = key if key is not None else jax.random.PRNGKey(0)
     info: Dict[str, Any] = {"method": method}
@@ -319,7 +392,9 @@ def grow(small_params, cfg1: ModelConfig, cfg2: ModelConfig, *,
                                     scan_chunk=ligo_scan_chunk,
                                     phase_ckpt=ligo_ckpt,
                                     phase_meta=ligo_meta,
-                                    fail_at=ligo_fail_at)
+                                    fail_at=ligo_fail_at,
+                                    ledger=ligo_ledger,
+                                    ledger_ctx=ligo_ledger_ctx)
             info["ligo_losses"] = losses
     else:
         raise ValueError(method)

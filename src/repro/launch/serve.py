@@ -35,6 +35,7 @@ the same code runs on host devices at smoke scale.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -369,6 +370,21 @@ def main():
     ap.add_argument("--obs-profile", default=None, metavar="DIR",
                     help="wrap the run in jax.profiler start/stop_trace, "
                          "writing the trace to DIR")
+    ap.add_argument("--ledger", default=None, metavar="FILE",
+                    help="append the compute ledger to FILE: on the serve "
+                         "path it carries the hop lifecycle events "
+                         "(hop.begin/rollback/complete) and the measured "
+                         "decode-step cost pass, alongside any train-side "
+                         "records a shared FILE already holds")
+    ap.add_argument("--timeline", default=None, metavar="FILE",
+                    help="at exit, export the flight-recorder span tree "
+                         "(hop grow→cache-grow→swap as async spans; + the "
+                         "ledger track when --ledger is set) as Chrome "
+                         "trace-event JSON — open in Perfetto")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="N",
+                    help="expose the obs registry in Prometheus text "
+                         "format at GET /metrics on this port (0 binds an "
+                         "ephemeral port; the bound port is printed)")
     ap.add_argument("--grow-to", default=None, metavar="ARCH[,ARCH...]",
                     help="hot-grow the checkpoint to this arch (or '2x' for "
                          "a doubled-depth/1.5x-width same-family target) at "
@@ -384,6 +400,14 @@ def main():
                          "grow in place on the production mesh")
     args = ap.parse_args()
 
+    if args.metrics_port is not None:
+        srv = obs.serve_metrics(args.metrics_port)
+        print(f"[obs] serving /metrics on http://{srv.server_address[0]}:"
+              f"{srv.server_address[1]}/metrics")
+    if args.ledger:
+        # the serve driver owns no checkpoint cursor: start the serve
+        # segment clean (a fresh file, or truncate a stale tail)
+        obs.attach_ledger(args.ledger).restore(None)
     if args.obs_log:
         obs.attach_jsonl(args.obs_log)
     try:
@@ -392,6 +416,19 @@ def main():
     finally:
         if args.obs_report:
             print(obs.report())
+        led_path = None
+        if args.ledger:
+            led = obs.detach_ledger()
+            if led is not None:
+                led_path = led.path
+                print(f"[ledger] compute ledger written to {led_path} "
+                      f"({led.n_records} records)")
+        if args.timeline:
+            led_src = (led_path
+                       if led_path and os.path.exists(led_path) else None)
+            trace = obs.export_chrome_trace(args.timeline, ledger=led_src)
+            print(f"[obs] timeline written to {args.timeline} "
+                  f"({len(trace['traceEvents'])} trace events)")
         if args.obs_log:
             path = obs.close_jsonl()
             print(f"[obs] structured log written to {path}")

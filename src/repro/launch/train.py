@@ -102,8 +102,36 @@ def main():
     ap.add_argument("--obs-profile", default=None, metavar="DIR",
                     help="wrap the run in jax.profiler start/stop_trace, "
                          "writing the trace to DIR")
+    ap.add_argument("--ledger", default=None, metavar="FILE",
+                    help="append the durable compute ledger to FILE: one "
+                         "JSONL record per train/LiGO step (loss, tokens, "
+                         "modelled + measured cumulative FLOPs) plus "
+                         "hop/probe events. Requires --trajectory/"
+                         "--autogrow — the ledger cursor rides checkpoint "
+                         "meta, so a killed run resumes record-identical. "
+                         "Feed two ledgers to obs.savings_report for the "
+                         "FLOPs-to-target-loss comparison")
+    ap.add_argument("--timeline", default=None, metavar="FILE",
+                    help="at exit, export the flight-recorder span tree "
+                         "(+ the ledger loss/FLOPs track when --ledger is "
+                         "set) as Chrome trace-event JSON — open in "
+                         "Perfetto or chrome://tracing")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="N",
+                    help="expose the obs registry in Prometheus text "
+                         "format at GET /metrics on this port (0 binds an "
+                         "ephemeral port; the bound port is printed)")
     args = ap.parse_args()
 
+    if args.ledger and not (args.trajectory or args.autogrow):
+        raise SystemExit("--ledger requires --trajectory/--autogrow: the "
+                         "trajectory runner owns the cursor-in-checkpoint "
+                         "contract that makes the ledger crash-safe")
+    if args.metrics_port is not None:
+        srv = obs.serve_metrics(args.metrics_port)
+        print(f"[obs] serving /metrics on http://{srv.server_address[0]}:"
+              f"{srv.server_address[1]}/metrics")
+    if args.ledger:
+        obs.attach_ledger(args.ledger)
     if args.obs_log:
         obs.attach_jsonl(args.obs_log)
     try:
@@ -112,6 +140,19 @@ def main():
     finally:
         if args.obs_report:
             print(obs.report())
+        led_path = None
+        if args.ledger:
+            led = obs.detach_ledger()
+            if led is not None:
+                led_path = led.path
+                print(f"[ledger] compute ledger written to {led_path} "
+                      f"({led.n_records} records)")
+        if args.timeline:
+            led_src = (led_path
+                       if led_path and os.path.exists(led_path) else None)
+            trace = obs.export_chrome_trace(args.timeline, ledger=led_src)
+            print(f"[obs] timeline written to {args.timeline} "
+                  f"({len(trace['traceEvents'])} trace events)")
         if args.obs_log:
             path = obs.close_jsonl()
             print(f"[obs] structured log written to {path}")

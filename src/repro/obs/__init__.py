@@ -13,7 +13,20 @@ each request" across the whole train→grow→serve lifecycle:
   bucket width of a NumPy oracle) in a process-global named registry.
 - **Export** (:mod:`repro.obs.export`, :mod:`repro.obs.prom`) — JSONL
   streaming (``--obs-log``), the human report (``--obs-report``),
-  Prometheus text format, and ``jax.profiler`` gating (``--obs-profile``).
+  Prometheus text format + a ``/metrics`` HTTP endpoint
+  (``--metrics-port``), and ``jax.profiler`` gating (``--obs-profile``).
+- **Compute ledger** (:mod:`repro.obs.ledger`) — durable loss-vs-FLOPs
+  accounting: an append-only JSONL with one record per train/LiGO step
+  whose cursor rides checkpoint meta (kill-anywhere, resume
+  bit-identical), plus ``savings_report`` — FLOPs-to-target-loss vs a
+  from-scratch baseline ledger, the paper's headline metric.
+- **Measured costs** (:mod:`repro.obs.costs`) — per compiled program,
+  read FLOPs/bytes back from ``compiled.cost_analysis()`` through the
+  roofline trip-count correction at compile time (never inside jit) and
+  reconcile against the 6ND model (``ledger.flops.*`` gauges).
+- **Timeline** (:mod:`repro.obs.timeline`) — Chrome-trace/Perfetto
+  export of the span tree + ledger events (``--timeline``, or
+  ``python -m repro.obs.timeline`` on an ``--obs-log`` file).
 
 Naming scheme: ``<layer>.<unit>[_<ms|s>]`` with dots — ``serve.decode.step_ms``,
 ``serve.request.ttft_ms``, ``serve.spec.acc_ema``, ``serve.kv.pool_in_use_blocks``,
@@ -31,25 +44,35 @@ bench entry in ``BENCH_growth.json`` holds the enabled/disabled cost ratio
 at ≤ 1.02x on the serving and LiGO-phase legs.
 """
 from repro.obs.metrics import (
-    Counter, CounterGroup, Gauge, Histogram, MetricsRegistry, MS_BUCKETS,
-    RATE_BUCKETS, REGISTRY, S_BUCKETS, counter, counter_group, gauge,
-    histogram,
+    Counter, CounterGroup, Gauge, Histogram, LOG10_BUCKETS, MetricsRegistry,
+    MS_BUCKETS, RATE_BUCKETS, REGISTRY, S_BUCKETS, counter, counter_group,
+    gauge, histogram,
 )
 from repro.obs.trace import (
     FLIGHT, FlightRecorder, dump_dir, enabled, event, flight_dump,
     set_dump_dir, set_enabled, span,
 )
 from repro.obs.export import attach_jsonl, close_jsonl, profile, report
-from repro.obs import prom
+from repro.obs.prom import serve_metrics
+from repro.obs.ledger import (
+    RunLedger, active_ledger, attach_ledger, detach_ledger, read_ledger,
+    savings_report,
+)
+from repro.obs.timeline import export_chrome_trace
+from repro.obs import costs, prom
 
 __all__ = [
     # metrics
     "Counter", "CounterGroup", "Gauge", "Histogram", "MetricsRegistry",
     "REGISTRY", "counter", "counter_group", "gauge", "histogram",
-    "MS_BUCKETS", "S_BUCKETS", "RATE_BUCKETS",
+    "MS_BUCKETS", "S_BUCKETS", "RATE_BUCKETS", "LOG10_BUCKETS",
     # tracing
     "FLIGHT", "FlightRecorder", "span", "event", "flight_dump",
     "set_dump_dir", "dump_dir", "set_enabled", "enabled",
     # export
     "attach_jsonl", "close_jsonl", "report", "profile", "prom",
+    "serve_metrics",
+    # compute ledger + measured costs + timeline
+    "RunLedger", "attach_ledger", "active_ledger", "detach_ledger",
+    "read_ledger", "savings_report", "costs", "export_chrome_trace",
 ]

@@ -29,7 +29,7 @@ from repro.obs import _state
 __all__ = [
     "Counter", "CounterGroup", "Gauge", "Histogram", "MetricsRegistry",
     "REGISTRY", "counter", "counter_group", "gauge", "histogram",
-    "MS_BUCKETS", "S_BUCKETS", "RATE_BUCKETS",
+    "MS_BUCKETS", "S_BUCKETS", "RATE_BUCKETS", "LOG10_BUCKETS",
 ]
 
 # Wall-time buckets in milliseconds: sub-0.1ms host blips up through
@@ -49,6 +49,13 @@ RATE_BUCKETS: Tuple[float, ...] = (
     1.0, 2.0, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0,
     2500.0, 5000.0, 10_000.0, 25_000.0, 100_000.0,
 )
+# Count-scale quantities spanning many orders of magnitude — per-step
+# FLOPs, token counts, byte volumes. MS_BUCKETS tops out at 3e5, which
+# collapses anything FLOP-scale into the +inf bucket; these half-decade
+# edges cover 1 … ~3e18 (exaFLOP steps) at a constant relative
+# resolution of sqrt(10) per bucket.
+LOG10_BUCKETS: Tuple[float, ...] = tuple(
+    round(10.0 ** (e / 2.0), 6) for e in range(0, 38))
 
 
 class Counter:

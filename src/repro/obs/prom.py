@@ -11,16 +11,23 @@ registry is scrape-ready behind any HTTP handler the deployment provides:
 
 Metric names are sanitised (dots become underscores) per the Prometheus
 data model.
+
+``serve_metrics(port)`` provides the HTTP handler too: a stdlib
+``ThreadingHTTPServer`` on a daemon thread answering ``GET /metrics``
+with a fresh ``render()`` per scrape (``--metrics-port`` on the launch
+CLIs; port 0 binds an ephemeral port, read it back from
+``server.server_address``).
 """
 from __future__ import annotations
 
 import math
 import re
+import threading
 from typing import Optional
 
 from repro.obs.metrics import REGISTRY, MetricsRegistry
 
-__all__ = ["render", "sanitize"]
+__all__ = ["render", "sanitize", "serve_metrics"]
 
 _NAME_RE = re.compile(r"[^a-zA-Z0-9_:]")
 
@@ -71,3 +78,36 @@ def render(registry: Optional[MetricsRegistry] = None) -> str:
             out.append(f"{pname}_sum {_num(float(snap['sum']))}")
             out.append(f"{pname}_count {snap['count']}")
     return "\n".join(out) + ("\n" if out else "")
+
+
+def serve_metrics(port: int = 0, *, host: str = "127.0.0.1",
+                  registry: Optional[MetricsRegistry] = None):
+    """Expose ``render()`` at ``GET /metrics`` on a daemon thread.
+
+    Returns the started ``http.server.ThreadingHTTPServer``; the bound
+    port (ephemeral when ``port=0``) is ``server.server_address[1]`` and
+    ``server.shutdown()`` stops it. Anything but ``/metrics`` is a 404.
+    """
+    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+    class _Handler(BaseHTTPRequestHandler):
+        def do_GET(self):              # noqa: N802 (stdlib handler API)
+            if self.path.split("?", 1)[0] != "/metrics":
+                self.send_error(404)
+                return
+            body = render(registry).encode("utf-8")
+            self.send_response(200)
+            self.send_header("Content-Type",
+                             "text/plain; version=0.0.4; charset=utf-8")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *args):  # scrapes are not stdout events
+            pass
+
+    server = ThreadingHTTPServer((host, port), _Handler)
+    thread = threading.Thread(target=server.serve_forever, daemon=True,
+                              name="obs-metrics")
+    thread.start()
+    return server

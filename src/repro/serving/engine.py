@@ -238,6 +238,18 @@ class ServingEngine:
         fns = make_serving_fns(cfg, cap, self.kv_layout, self.keep_residual)
         if state is None:
             state = self.fresh_state(cfg)
+        if obs.active_ledger() is not None:
+            # compile-time cost pass (never inside jit): read the decode
+            # step's measured FLOPs back from the compiled program and
+            # reconcile against the 2N-per-token model. AOT-lowered here so
+            # the ledger-off path pays nothing.
+            from repro.obs import costs
+            costs.measure_jitted(
+                f"decode_step[{cfg.name}]", fns[1], params, state,
+                jax.ShapeDtypeStruct((self.slots, 1), jnp.int32),
+                modelled_flops=2.0 * cfg.active_param_count() * self.slots,
+                n_devices=1 if self.mesh is None else self.mesh.size,
+                per_call_units=self.slots)
         hopped = hasattr(self, "cfg")
         if hopped:
             obs.event("serve.install", src=self.cfg.name, dst=cfg.name,

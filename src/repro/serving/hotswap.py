@@ -40,6 +40,15 @@ from repro.serving.kv_pages import paged_supported
 STAGES = ("grow", "cache-grow", "swap")
 
 
+def _ledger_event(name: str, **attrs) -> None:
+    """Mirror a hop lifecycle event into the attached compute ledger (if
+    any), so the durable loss-vs-FLOPs record shows *where* the hops and
+    rollbacks landed between the step records. No-op without a ledger."""
+    led = obs.active_ledger()
+    if led is not None:
+        led.record_event(name, **attrs)
+
+
 class HopError(RuntimeError):
     """A hop stage failed (injected or real); the hop rolls back."""
 
@@ -233,6 +242,8 @@ class HopController:
               f"{len(eng.live)} live sessions)")
         obs.event("hop.begin", src=eng.cfg.name, dst=self.cfg2.name,
                   live=len(eng.live), background=self.background)
+        _ledger_event("hop.begin", src=eng.cfg.name, dst=self.cfg2.name,
+                      live=len(eng.live))
         self._t_begin = time.perf_counter()
         self._launch()
 
@@ -250,6 +261,8 @@ class HopController:
                   attempt=self.attempts, gen=self._gen,
                   wall_s=round(time.perf_counter() - (self._t_begin or 0), 3),
                   live=len(eng.live), dropped=0)
+        _ledger_event("hop.rollback", stage=stage, cause=str(err),
+                      attempt=self.attempts, dropped=0)
         if self.attempts <= self.retries:
             delay = self.backoff * (2 ** (self.attempts - 1))
             self._retry_at = time.perf_counter() + delay
@@ -361,6 +374,8 @@ class HopController:
         obs.event("hop.complete", src=old_name, dst=self.cfg2.name,
                   hop_ms=round(self.hop_ms, 1), cache=mode, live=live,
                   attempt=self.attempts, of=self.retries + 1)
+        _ledger_event("hop.complete", src=old_name, dst=self.cfg2.name,
+                      cache=mode, attempt=self.attempts)
         wd = self.watchdog
         print(f"[hop] hop complete: {old_name} -> {self.cfg2.name} in "
               f"{self.hop_ms:.1f} ms (cache: {mode}, {live} live sessions "

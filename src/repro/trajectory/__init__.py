@@ -67,6 +67,23 @@ histograms ``traj.stage.train_ms`` / ``traj.stage.grow_ms`` — so
 trajectory's wall clock went without touching the timing dict the result
 already carries.
 
+With a compute ledger attached (``--ledger`` on ``launch.train``, or
+``repro.obs.attach_ledger``) the runner additionally owns the durable
+loss-vs-FLOPs record's lifecycle: every train and LiGO-phase step appends
+one ledger record (modelled FLOPs from :mod:`repro.roofline`, measured
+FLOPs read back from the compiled step at compile time), every hop
+brackets itself with ``hop.begin``/``hop.complete`` events, and the
+ledger *cursor* — byte offset + cumulative totals — rides each
+checkpoint's meta next to the stage coordinates. On resume the runner
+truncates the ledger back to the restored cursor before re-emitting, and
+a LiGO-phase checkpoint (which carries no cursor of its own) replays the
+phase's earlier chunk records from its saved losses — so a kill anywhere,
+including mid-hop, yields a ledger record-for-record identical to an
+uninterrupted run. The finished ledger feeds
+:func:`repro.obs.savings_report` (FLOPs-to-target-loss vs a from-scratch
+baseline) and the ``--timeline`` Chrome-trace export, which renders it as
+a loss/cumulative-FLOPs track alongside the span tree.
+
 Optimizer-state semantics per method
 ------------------------------------
 Every hop grows the AdamW state through the same operator as the weights

@@ -72,7 +72,7 @@ LIGO_PHASE_DIR = "ligo_phase"
 class TrajectoryRunner:
     def __init__(self, traj: TrajectoryConfig, *, ckpt_dir: str,
                  mesh=None, keep: int = 3, verbose: bool = True,
-                 ligo_fail_at: Optional[int] = None):
+                 ligo_fail_at: Optional[int] = None, ledger=None):
         self.traj = traj
         self.mgr = CheckpointManager(ckpt_dir, keep=keep)
         self.mesh = mesh
@@ -83,6 +83,10 @@ class TrajectoryRunner:
         self.ligo_fail_at = ligo_fail_at
         self.decisions: List[Dict[str, Any]] = []
         self._tele_restore: Optional[Dict] = None
+        # the compute ledger (explicit, or whatever --ledger attached):
+        # its cursor rides every checkpoint meta like the telemetry ring,
+        # and its per-step FLOPs columns come from the measured-cost pass
+        self.ledger = ledger if ledger is not None else obs.active_ledger()
 
     # ------------------------------------------------------------------
     def _log(self, msg: str) -> None:
@@ -99,6 +103,11 @@ class TrajectoryRunner:
             # the controller's signal state rides the checkpoint, so a
             # resumed auto stage replays the same growth decision
             meta["autogrow"] = tele.snapshot()
+        if self.ledger is not None:
+            # ledger cursor: snapshot() fsyncs the file first, so every
+            # record up to this offset is durable before the checkpoint
+            # carrying the cursor lands — restore truncates back to it
+            meta["ledger"] = self.ledger.snapshot()
         return meta
 
     def _template(self, stage: int):
@@ -121,6 +130,8 @@ class TrajectoryRunner:
     def _restore_or_init(self):
         meta = self.mgr.latest_meta()
         if meta is None:
+            if self.ledger is not None:
+                self.ledger.restore(None)      # fresh run: empty ledger
             cfg0 = self.traj.stages[0].cfg
             params = init_params(cfg0, jax.random.PRNGKey(self.traj.seed))
             return 0, 0, 0, params, adamw_init(params)
@@ -150,6 +161,13 @@ class TrajectoryRunner:
                 ) from e
             raise
         self._tele_restore = meta.get("autogrow")
+        if self.ledger is not None:
+            # truncate the ledger back to this checkpoint's cursor; the
+            # re-executed steps re-append identical records (the runner is
+            # deterministic), including the tail a mid-LiGO kill left —
+            # train_ligo replays its phase-checkpoint losses into the
+            # ledger on resume
+            self.ledger.restore(meta.get("ledger"))
         self.resumed_at = (stage, k)
         self._log(f"resumed trajectory {self.traj.hash()} at stage {stage} "
                   f"step {k} ({meta['arch']})")
@@ -157,7 +175,10 @@ class TrajectoryRunner:
 
     # ------------------------------------------------------------------
     def _stage_step_fn(self, stage: int, params):
-        """(jitted step, loader, shardings) for one stage's train leg."""
+        """(jitted step, loader, shardings, measurement) for one stage's
+        train leg. The measurement (None unless a ledger is active) is
+        the compile-time measured-cost pass over the same jitted program:
+        FLOPs read back from XLA, per train step."""
         st = self.traj.stages[stage]
         tcfg = TrainConfig(steps=st.budget,
                            warmup_steps=max(st.budget // 10, 1),
@@ -168,10 +189,21 @@ class TrajectoryRunner:
                                    self.traj.seq,
                                    seed=self.traj.seed + 101 * stage)
         if self.mesh is None:
-            return jax.jit(step_fn), loader, None, None
-        jstep, psh, osh = pjit_train_step(step_fn, params,
-                                          loader.batch_at(0), self.mesh)
-        return jstep, loader, psh, osh
+            jstep, psh, osh = jax.jit(step_fn), None, None
+        else:
+            jstep, psh, osh = pjit_train_step(step_fn, params,
+                                              loader.batch_at(0), self.mesh)
+        meas = None
+        if self.ledger is not None:
+            from repro.obs import costs
+            meas = costs.measure_jitted(
+                f"train_step[{st.cfg.name}]", jstep, params,
+                jax.eval_shape(adamw_init, params), loader.batch_at(0),
+                jnp.asarray(0),
+                modelled_flops=train_flops_per_step(
+                    st.cfg, self.traj.batch, self.traj.seq),
+                n_devices=1 if self.mesh is None else self.mesh.size)
+        return jstep, loader, psh, osh, meas
 
     def _stage_controller(self, stage: int):
         """(policy, telemetry) for an auto stage; (None, None) for static
@@ -238,7 +270,11 @@ class TrajectoryRunner:
             apply=False, ligo_ckpt=ligo_ckpt,
             ligo_meta={"trajectory": self.traj.hash(), "stage": stage},
             ligo_scan_chunk=gs.ligo_scan_chunk,
-            ligo_fail_at=self.ligo_fail_at)
+            ligo_fail_at=self.ligo_fail_at,
+            ligo_ledger=self.ledger,
+            ligo_ledger_ctx=None if self.ledger is None else {
+                "stage": stage,
+                "n_devices": 1 if self.mesh is None else self.mesh.size})
         return info["operator"], gs
 
     def _grow_into(self, stage: int, params, opt, *, method=None):
@@ -356,8 +392,20 @@ class TrajectoryRunner:
                 t_train = time.perf_counter()
                 with obs.span("traj.train", stage=stage,
                               arch=st.cfg.name, start=k):
-                    jstep, loader, psh, osh = self._stage_step_fn(stage,
-                                                                  params)
+                    jstep, loader, psh, osh, meas = self._stage_step_fn(
+                        stage, params)
+                    fps_model = tokens_step = meas_fps = None
+                    if self.ledger is not None:
+                        fps_model = train_flops_per_step(
+                            st.cfg, self.traj.batch, self.traj.seq)
+                        tokens_step = float(self.traj.batch * self.traj.seq)
+                        meas_fps = (meas or {}).get("flops_per_unit")
+                        if tele is not None and meas_fps is not None:
+                            # the controller's cum-FLOPs axis follows the
+                            # measured number; deterministic across resume
+                            # because the resumed process re-measures the
+                            # same program before its first record
+                            tele.set_flops_per_step(meas_fps)
                     if psh is not None:
                         params = jax.tree.map(jax.device_put, params, psh)
                         opt = jax.tree.map(jax.device_put, opt, osh)
@@ -381,12 +429,21 @@ class TrajectoryRunner:
                                       f"(stage {stage} step {k})")
                             return result("paused")
                         batch = loader.batch_at(k)
+                        t_step = time.perf_counter()
                         params, opt, m = jstep(params, opt, batch,
                                                jnp.asarray(k))
                         k += 1
                         global_step += 1
-                        loss = float(m["total"])
+                        loss = float(m["total"])      # host sync point
                         history.append((global_step, stage, loss))
+                        if self.ledger is not None:
+                            self.ledger.record_step(
+                                stage=stage, arch=st.cfg.name,
+                                step=global_step, loss=loss,
+                                tokens=tokens_step,
+                                wall_ms=(time.perf_counter() - t_step) * 1e3,
+                                flops_modelled=fps_model,
+                                flops_measured=meas_fps)
                         if tele is not None:
                             tele.record(global_step, loss)
                         if on_metrics is not None:
@@ -422,12 +479,28 @@ class TrajectoryRunner:
                     {"stage": stage, "stage_step": k,
                      "global_step": global_step, "kind": "probe",
                      "picked": method, "scores": scores})
+                if self.ledger is not None:
+                    self.ledger.record_event(
+                        "probe", stage=stage, step=global_step,
+                        picked=method,
+                        scores={m: float(s) for m, s in sorted(
+                            scores.items())})
                 self._log(f"probe picked method={method} "
                           f"({', '.join(f'{m}={s:.4f}' for m, s in sorted(scores.items()))})")
+            if self.ledger is not None:
+                self.ledger.record_event(
+                    "hop.begin", stage=stage + 1, step=global_step,
+                    src=st.cfg.name, dst=nxt.cfg.name,
+                    method=method or nxt.growth.method)
             with obs.span("traj.grow", stage=stage + 1,
                           src=st.cfg.name, dst=nxt.cfg.name):
                 stage, params, opt, grow_ms = self._grow_into(
                     stage + 1, params, opt, method=method)
+            if self.ledger is not None:
+                # deterministic attrs only — the wall lives in the span
+                self.ledger.record_event(
+                    "hop.complete", stage=stage, step=global_step,
+                    src=st.cfg.name, dst=stages[stage].cfg.name)
             timing(stage)["grow_ms"] = grow_ms
             h_grow.observe(grow_ms)
             k = 0

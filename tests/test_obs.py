@@ -207,9 +207,27 @@ def test_counter_group_is_thread_safe():
     assert g["k"] == 8000                   # += on a dict would lose some
 
 
-@pytest.mark.parametrize("dist", ["uniform", "lognormal", "bimodal"])
+@pytest.mark.parametrize("dist", ["uniform", "lognormal", "bimodal",
+                                  "log10_flops"])
 def test_histogram_percentiles_match_numpy_within_bucket(dist):
     rng = np.random.RandomState(0)
+    if dist == "log10_flops":
+        # FLOP-scale magnitudes through the half-decade LOG10_BUCKETS the
+        # ledger histograms use: the oracle bracket is multiplicative (one
+        # bucket = one 10^0.5 edge ratio) instead of additive
+        data = rng.lognormal(np.log(1e9), 2.0, 4000)
+        h = obs.histogram("t.h_log10", buckets=obs.LOG10_BUCKETS)
+        for v in data:
+            h.observe(v)
+        assert h.count == len(data)
+        for q in (1, 10, 50, 90, 99):
+            est = h.percentile(q)
+            lo_o = float(np.percentile(data, q, method="lower"))
+            hi_o = float(np.percentile(data, q, method="higher"))
+            edge = 10.0 ** 0.5
+            assert lo_o / edge * 0.999 <= est <= hi_o * edge * 1.001, \
+                (q, est, lo_o, hi_o)
+        return
     if dist == "uniform":
         data = rng.uniform(0.0, 50.0, 4000)
     elif dist == "lognormal":
